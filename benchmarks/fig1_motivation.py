@@ -1,0 +1,35 @@
+"""Paper Figure 1: the motivating example, exact arithmetic.
+
+Expected (paper):
+  Varys (CCT-optimal): CCTs (3,4) avg 3.5 | JCTs (6,10) avg 8
+  MSA   (DAG-aware)  : CCTs (4,4) avg 4.0 | JCTs (7,7)  avg 7
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (FairScheduler, MSAScheduler, VarysScheduler,
+                        figure1_jobs, simulate)
+
+
+def run(quick: bool = False) -> list[tuple]:
+    rows = []
+    for sched in (MSAScheduler(), VarysScheduler(), FairScheduler()):
+        t0 = time.perf_counter()
+        res = simulate(figure1_jobs(), sched, n_ports=3)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig1/{sched.name}", us,
+                     f"avg_jct={res.avg_jct:.3f};avg_cct={res.avg_cct:.3f};"
+                     f"jct_J1={res.jct['J1']:.1f};jct_J2={res.jct['J2']:.1f}"))
+    return rows
+
+
+def check(rows) -> list[str]:
+    errs = []
+    vals = {r[0]: r[2] for r in rows}
+    if "avg_jct=7.000" not in vals["fig1/msa"]:
+        errs.append(f"MSA avg JCT != 7: {vals['fig1/msa']}")
+    if "avg_jct=8.000" not in vals["fig1/varys"]:
+        errs.append(f"Varys avg JCT != 8: {vals['fig1/varys']}")
+    return errs

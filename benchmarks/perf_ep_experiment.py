@@ -1,0 +1,52 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Perf experiment: TP-within-expert vs expert-parallel MoE for
+llama4-maverick (128e top-1) at train_4k.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_ep_experiment
+"""
+
+import dataclasses
+
+from repro.configs import get_config, shapes_for
+from repro.launch.dryrun import _compile, _depth_variant
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import use_moe_ep
+from repro.roofline.analysis import collective_bytes
+
+
+def probe(cfg, shape, mesh, units=2):
+    c = _compile(_depth_variant(cfg, units), shape, mesh, unroll=True)
+    ca = c.cost_analysis()
+    return {
+        "flops": ca.get("flops", 0.0),
+        "bytes": ca.get("bytes accessed", 0.0),
+        "coll": collective_bytes(c.as_text()),
+    }
+
+
+def main() -> None:
+    arch = "llama4-maverick-400b-a17b"
+    cfg = get_config(arch)
+    shape = shapes_for(cfg)["train_4k"]
+    mesh = make_production_mesh()
+
+    base = probe(cfg, shape, mesh)
+    with use_moe_ep(True):
+        ep = probe(dataclasses.replace(cfg, moe_ep=True), shape, mesh)
+
+    for name, r in (("tp-within-expert (baseline)", base),
+                    ("expert-parallel (EP)", ep)):
+        total = sum(r["coll"].values())
+        print(f"\n{name}:")
+        print(f"  flops/dev {r['flops']:.3e}  bytes/dev {r['bytes']:.3e}")
+        print(f"  collective total {total / 1e9:.2f} GB/dev:")
+        for k, v in sorted(r["coll"].items(), key=lambda kv: -kv[1]):
+            if v:
+                print(f"    {k:20s} {v / 1e9:9.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Hillclimb probe: per-collective-kind byte breakdown + biggest ops for
+one (arch x shape) cell at reduced depth (unrolled).
+
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch mixtral-8x22b \
+      --shape train_4k [--units 2] [--multi-pod] [--top 12]
+"""
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_config, shapes_for
+from repro.launch.dryrun import _compile, _depth_variant
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import _OP_RE, _shape_bytes, collective_bytes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--units", type=int, default=2)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = shapes_for(cfg)[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    c = _compile(_depth_variant(cfg, args.units), shape, mesh, unroll=True)
+    txt = c.as_text()
+    ca = c.cost_analysis()
+    print(f"flops/device: {ca.get('flops', 0):.3e}   "
+          f"bytes/device: {ca.get('bytes accessed', 0):.3e}")
+    print("collective bytes by kind (per device):")
+    for k, v in sorted(collective_bytes(txt).items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v / 1e9:10.3f} GB")
+
+    # biggest individual collective ops with their metadata op_name
+    ops = []
+    for line in txt.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(2)) or _shape_bytes(
+            line.split("=")[1].split(m.group(1))[0])
+        meta = re.search(r'op_name="([^"]+)"', line)
+        ops.append((b, m.group(1), (meta.group(1)[:110] if meta else "?")))
+    ops.sort(reverse=True)
+    print(f"\ntop {args.top} collectives:")
+    for b, kind, name in ops[:args.top]:
+        print(f"  {b / 1e9:8.3f} GB  {kind:18s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Perf experiment (iteration 6): FSDP vs weight-stationary serving layout.
+
+Weight-stationary (weights sharded over `model` only, replicated across
+`data`) removes every per-step FSDP weight all-gather from decode — the
+right layout whenever the TP-resident weights fit HBM
+(params_bytes / model_shards <= budget); catastrophic otherwise
+(llama3-405b: 185 GB/device).  See EXPERIMENTS.md §Perf iteration 6.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_serving_layout [--arch ...]
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, param_count, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_specs
+from repro.models import get_model
+from repro.parallel import axes as ax
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     serving_param_specs)
+from repro.roofline.analysis import LINK_BW, total_collective_bytes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*",
+                    default=["qwen2-7b", "llama3-405b"])
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    print(f"{'arch':14s} {'layout':20s} {'coll GB/dev':>11s} "
+          f"{'coll term s':>11s} {'args+temp GB':>12s} {'fits 16GB':>9s}")
+    for arch in args.arch:
+        cfg = get_config(arch)
+        shape = shapes_for(cfg)["decode_32k"]
+        model = get_model(cfg)
+        token, cache = decode_specs(cfg, shape, model)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        for name, fn_spec in (("fsdp(train-layout)", param_specs),
+                              ("weight-stationary", serving_param_specs)):
+            with jax.set_mesh(mesh), ax.logical_mesh(mesh.axis_names):
+                fn = jax.jit(model.decode,
+                             in_shardings=(fn_spec(params, mesh),
+                                           batch_specs(token, mesh),
+                                           cache_specs(cache, mesh)),
+                             donate_argnums=2)
+                c = fn.lower(params, token, cache).compile()
+            coll = total_collective_bytes(c.as_text())
+            mem = c.memory_analysis()
+            tot = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 1e9
+            print(f"{arch:14s} {name:20s} {coll / 1e9:11.2f} "
+                  f"{coll / LINK_BW:11.4f} {tot:12.1f} "
+                  f"{'yes' if tot <= 16 else 'NO':>9s}")
+        # the gate a serving launcher would apply:
+        repl_gb = 2 * param_count(cfg) / 16 / 1e9   # bf16 / model shards
+        print(f"{'':14s} -> gate: TP-resident weights = {repl_gb:.1f} GB/dev "
+              f"=> {'weight-stationary' if repl_gb <= 8 else 'FSDP serving'}")
+
+
+if __name__ == "__main__":
+    main()

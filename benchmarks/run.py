@@ -1,0 +1,63 @@
+"""Benchmark harness — one module per paper table/figure + framework
+integration tables.  Prints ``name,us_per_call,derived`` CSV rows and
+fails (exit 1) if any bench's check() finds a regression.
+
+  fig1_motivation  — paper Fig 1 exact arithmetic (MSA 7 vs Varys 8)
+  fig3_topologies  — paper Fig 3b topology sweep, two workload regimes
+  comm_overlap     — MSA on our own training-step DAG (all archs)
+  sched_micro      — scheduler decision latency
+  roofline_table   — §Roofline summary from dry-run artifacts
+
+Usage: python -m benchmarks.run [--quick] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (comm_overlap, fig1_motivation, fig3_topologies,
+                        roofline_table, sched_micro)
+
+BENCHES = {
+    "fig1_motivation": fig1_motivation,
+    "fig3_topologies": fig3_topologies,
+    "comm_overlap": comm_overlap,
+    "sched_micro": sched_micro,
+    "roofline_table": roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", choices=sorted(BENCHES))
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures: list[str] = []
+    for name, mod in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        rows = mod.run(quick=args.quick)
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+        errs = mod.check(rows)
+        for e in errs:
+            print(f"CHECK-FAIL[{name}]: {e}", file=sys.stderr)
+        failures.extend(errs)
+
+    if args.only is None or args.only == "roofline_table":
+        print()
+        print("== Roofline (single-pod) ==")
+        print(roofline_table.table("single"))
+        print()
+        print("== Roofline (multi-pod) ==")
+        print(roofline_table.table("multi"))
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

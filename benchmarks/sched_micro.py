@@ -1,0 +1,55 @@
+"""Scheduler decision-latency microbenchmark.
+
+MSA re-sorts on every metaflow event; at datacenter scale the decision
+cost matters (the paper's ongoing-work section targets online deployment).
+Measures one assign_rates() call vs active flow count."""
+
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+
+from repro.core import Fabric, MSAScheduler, Simulator, VarysScheduler
+from repro.core.workload import build_job
+
+
+def _one_call_us(n_map: int, n_red: int, sched) -> float:
+    rng = random.Random(0)
+    sizes = [[1.0 + rng.random() for _ in range(n_red)]
+             for _ in range(n_map)]
+    job = build_job("j", n_map, n_red, sizes, "total_order", rng)
+    sim = Simulator(Fabric(n_ports=n_map + n_red), [job], sched)
+    # Build one SchedView by running zero steps: replicate run()'s setup.
+    from repro.core.simulator import SchedView
+    recs = list(sim._mfs)
+    view = SchedView(
+        t=0.0, n_ports=sim.fabric.n_ports, src=sim._src, dst=sim._dst,
+        rem=sim._rem, egress=np.asarray(sim.fabric.egress),
+        ingress=np.asarray(sim.fabric.ingress), active=recs,
+        jobs=[job], mf_records={job.name: recs})
+    sched.assign_rates(view)   # warm caches
+    n = 20
+    t0 = time.perf_counter()
+    for _ in range(n):
+        job.mark_dirty()
+        sched.assign_rates(view)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(quick: bool = False) -> list[tuple]:
+    rows = []
+    sizes = [(4, 8), (16, 32)] if quick else [(4, 8), (16, 32), (50, 100)]
+    for n_map, n_red in sizes:
+        for sched in (MSAScheduler(), VarysScheduler()):
+            us = _one_call_us(n_map, n_red, sched)
+            rows.append((f"sched_micro/{sched.name}/{n_map}x{n_red}", us,
+                         f"flows={n_map * n_red}"))
+    return rows
+
+
+def check(rows) -> list[str]:
+    # Decision latency must stay far below fabric RTT-scale budgets (~ms).
+    return [f"{name}: {us:.0f}us decision latency too slow"
+            for name, us, _ in rows if us > 100_000]

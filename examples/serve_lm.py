@@ -1,0 +1,83 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2-7b-smoke
+    PYTHONPATH=src python examples/serve_lm.py --arch jamba-1.5-large-398b-smoke
+
+Runs a batch of prompts through prefill, then greedy-decodes with the
+donated cache (attention KV ring buffers / SSM states), reporting
+tokens/s and cache footprint — the serving path the decode_* dry-run
+cells lower at production scale.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import get_model
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b-smoke")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_seq = args.prompt_len + args.gen
+
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "vision_patches":
+        batch["prefix"] = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.n_prefix_tokens, cfg.d_model)), jnp.float32)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_seq))
+    decode = jax.jit(model.decode, donate_argnums=2)
+
+    t0 = time.perf_counter()
+    logits, cache = jax.block_until_ready(prefill(params, batch))
+    t_prefill = time.perf_counter() - t0
+    print(f"arch={cfg.name}  prefill {args.batch}x{args.prompt_len} "
+          f"in {t_prefill * 1e3:.1f} ms  "
+          f"cache={cache_bytes(cache) / 1e6:.2f} MB")
+
+    token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [token]
+    # first decode step compiles; time the steady state
+    token_, cache = decode(params, token, cache)
+    token = jnp.argmax(token_, -1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, token, cache)
+        token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(token)
+    jax.block_until_ready(token)
+    dt = time.perf_counter() - t0
+    toks = args.batch * (args.gen - 1)
+    print(f"decode: {toks} tokens in {dt * 1e3:.1f} ms "
+          f"-> {toks / dt:.1f} tok/s "
+          f"({dt / (args.gen - 1) * 1e3:.2f} ms/step)")
+    seq = jnp.concatenate(out, axis=1)
+    assert bool(jnp.all((seq >= 0) & (seq < cfg.vocab_size)))
+    print("sample token ids:", np.asarray(seq[0, :12]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Core metaflow abstraction + MSA scheduling (the paper's contribution)."""
+
+from repro.core.baselines import FairScheduler, FifoScheduler, VarysScheduler
+from repro.core.fabric import Fabric
+from repro.core.metaflow import (ComputeTask, Flow, JobDAG, Metaflow,
+                                 figure1_jobs, figure2_job)
+from repro.core.msa import MSAScheduler, metaflow_priorities
+from repro.core.simulator import Perturbation, SimResult, Simulator, simulate
+
+__all__ = [
+    "ComputeTask", "Fabric", "FairScheduler", "FifoScheduler", "Flow",
+    "JobDAG", "MSAScheduler", "Metaflow", "Perturbation", "SimResult",
+    "Simulator", "VarysScheduler", "figure1_jobs", "figure2_job",
+    "metaflow_priorities", "simulate",
+]

@@ -1,0 +1,111 @@
+"""Baseline schedulers the paper compares against (and per-flow fairness).
+
+* ``VarysScheduler`` — coflow-based SEBF + MADD + backfill (Varys,
+  SIGCOMM'14).  Coflow = all active flows of one job (no DAG knowledge).
+* ``FairScheduler``  — per-flow max-min fairness via progressive filling
+  (the classic flow-level baseline the coflow literature improves on).
+* ``FifoScheduler``  — coflow FIFO by job arrival (Baraat-style), for
+  additional context in benchmarks.
+
+All operate on the simulator's vectorized ``SchedView`` and return a dense
+per-flow rate vector.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metaflow import EPS
+
+
+def _per_job_flow_ix(view) -> dict[str, np.ndarray]:
+    per_job: dict[str, list[np.ndarray]] = {}
+    for rec in view.active:
+        per_job.setdefault(rec.job.name, []).append(rec.flow_ix)
+    return {name: np.concatenate(chunks) for name, chunks in per_job.items()}
+
+
+class VarysScheduler:
+    """Smallest-Effective-Bottleneck-First over coflows, MADD rates."""
+
+    name = "varys"
+
+    def assign_rates(self, view):
+        per_job = _per_job_flow_ix(view)
+        order = sorted(per_job.items(),
+                       key=lambda kv: (view.bottleneck_time(kv[1]), kv[0]))
+        rates = np.zeros_like(view.rem)
+        res_eg = view.egress.copy()
+        res_in = view.ingress.copy()
+        for _, flow_ix in order:
+            view.madd(flow_ix, res_eg, res_in, rates)
+        if order:
+            ordered = np.concatenate([ix for _, ix in order])
+            view.backfill(ordered, res_eg, res_in, rates)
+        return rates
+
+
+class FifoScheduler:
+    """Coflows served in job-arrival order, MADD within a coflow."""
+
+    name = "fifo"
+
+    def assign_rates(self, view):
+        per_job = _per_job_flow_ix(view)
+        arrival = {j.name: (j.arrival, j.name) for j in view.jobs}
+        order = sorted(per_job.items(), key=lambda kv: arrival[kv[0]])
+        rates = np.zeros_like(view.rem)
+        res_eg = view.egress.copy()
+        res_in = view.ingress.copy()
+        for _, flow_ix in order:
+            view.madd(flow_ix, res_eg, res_in, rates)
+        if order:
+            ordered = np.concatenate([ix for _, ix in order])
+            view.backfill(ordered, res_eg, res_in, rates)
+        return rates
+
+
+class FairScheduler:
+    """Per-flow max-min fairness (progressive filling / water-filling)."""
+
+    name = "fair"
+
+    def assign_rates(self, view):
+        all_ix = np.concatenate([rec.flow_ix for rec in view.active])
+        all_ix = all_ix[view.rem[all_ix] > EPS]
+        rates = np.zeros_like(view.rem)
+        if all_ix.size == 0:
+            return rates
+        eg = view.egress.copy()
+        ing = view.ingress.copy()
+        src = view.src[all_ix]
+        dst = view.dst[all_ix]
+        alive = np.ones(all_ix.size, dtype=bool)
+        # Progressive filling: each round saturates >=1 port, so the loop
+        # runs at most 2 * n_ports times.
+        for _ in range(2 * view.n_ports + 1):
+            if not alive.any():
+                break
+            n_out = np.bincount(src[alive], minlength=view.n_ports)
+            n_in = np.bincount(dst[alive], minlength=view.n_ports)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                inc = min(
+                    np.where(n_out > 0, eg / np.maximum(n_out, 1),
+                             np.inf).min(),
+                    np.where(n_in > 0, ing / np.maximum(n_in, 1),
+                             np.inf).min())
+            if not np.isfinite(inc):
+                break
+            if inc > EPS:
+                rates[all_ix[alive]] += inc
+                eg -= n_out * inc
+                ing -= n_in * inc
+                np.clip(eg, 0.0, None, out=eg)
+                np.clip(ing, 0.0, None, out=ing)
+            # Freeze flows touching an exhausted port.
+            saturated = (eg[src] <= EPS) | (ing[dst] <= EPS)
+            newly = alive & saturated
+            if not newly.any() and inc <= EPS:
+                break
+            alive &= ~saturated
+        return rates

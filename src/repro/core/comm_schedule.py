@@ -1,0 +1,142 @@
+"""Metaflow/MSA bridge to the training step: DAG-aware gradient-sync order.
+
+The training step of an L-unit model is itself a distributed-application
+DAG in the paper's sense:
+
+  compute tasks:  bwd_U -> bwd_{U-1} -> ... -> bwd_1   (backward, reverse
+                  layer order), then opt_u per unit (optimizer shard update)
+  metaflows:      g_u = the gradient reduce-scatter bucket of unit u,
+                  produced by bwd_u, consumed by opt_u
+
+Every g_u is *direct* in MSA terms (it alone unlocks opt_u), so MSA ranks
+buckets by opt_load / remaining_bytes and — crucially — keeps re-ranking as
+buckets drain, which is exactly the priority-bucket overlap schedule
+(P3/ByteScheduler-style) derived here from the paper's abstraction instead
+of ad hoc.
+
+The fabric is the per-device ICI link (all SPMD peers are symmetric): one
+egress/ingress pair whose capacity is the link bandwidth; a ring
+reduce-scatter of ``bytes`` pushes ~``bytes`` through each device's link.
+
+Outputs:
+  * a static bucket priority order (realized in HLO by
+    parallel/collectives.py via optimization-barrier chaining), and
+  * simulated step times under msa / varys / fifo / flat-barrier sync —
+    the §Perf evidence for the overlap win.
+
+XLA-scan caveat (DESIGN.md §8): inside a scanned layer loop all units share
+one collective instruction, so the explicit ordered sync applies to
+unrolled-unit training (examples/train_lm.py) and to the bucket *sizing*
+of the scanned path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeConfig, param_count
+from repro.core.baselines import FifoScheduler, VarysScheduler
+from repro.core.fabric import Fabric
+from repro.core.metaflow import JobDAG
+from repro.core.msa import MSAScheduler
+from repro.core.simulator import simulate
+from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
+
+
+def unit_param_bytes(cfg: ModelConfig) -> float:
+    """Parameter bytes of one scan unit (bf16), excluding embeddings."""
+    from repro.models.transformer import n_units
+
+    D, V = cfg.d_model, cfg.vocab_size
+    embed = V * D * (1 if cfg.tie_embeddings else 2)
+    total = param_count(cfg) - embed
+    return 2.0 * total / n_units(cfg)
+
+
+def unit_bwd_seconds(cfg: ModelConfig, shape: ShapeConfig,
+                     chips: int = 256) -> float:
+    """Roofline estimate of one unit's backward+recompute time per step."""
+    from repro.configs.base import active_param_count
+    from repro.models.transformer import n_units
+
+    D, V = cfg.d_model, cfg.vocab_size
+    embed = V * D * (1 if cfg.tie_embeddings else 2)
+    active = active_param_count(cfg) - embed
+    tokens = shape.global_batch * shape.seq_len
+    # bwd + recompute ~ 6 flops/param/token of the unit's active params
+    flops = 6.0 * (active / n_units(cfg)) * tokens
+    return flops / (chips * PEAK_FLOPS)
+
+
+@dataclass
+class StepCommPlan:
+    order: list[int]              # unit indices, highest priority first
+    dag_steps: dict[str, float]   # policy -> simulated step seconds
+    bucket_bytes: float           # per-device bytes per bucket
+    overlap_fraction: float       # comm hidden by MSA vs flat barrier
+
+
+def build_train_dag(cfg: ModelConfig, shape: ShapeConfig, chips: int = 256,
+                    link_bw: float = LINK_BW, flat: bool = False,
+                    opt_ratio: float = 0.15) -> JobDAG:
+    """The training-step DAG on a 2-port per-device ICI fabric.
+
+    Sizes are in seconds-at-unit-capacity (flow size = transfer seconds at
+    full link rate; compute load = seconds).  ``flat=True`` builds the
+    barrier variant: one metaflow carrying every bucket, all optimizer
+    updates gated on it (classic end-of-step all-reduce).
+    """
+    from repro.models.transformer import n_units
+
+    U = n_units(cfg)
+    bwd = unit_bwd_seconds(cfg, shape, chips)
+    bytes_u = unit_param_bytes(cfg) / chips        # FSDP shard per device
+    xfer = bytes_u / link_bw                       # ring RS ~ bytes once
+    opt_load = opt_ratio * xfer + bytes_u * 6 / HBM_BW  # update is mem-bound
+
+    job = JobDAG(name=f"{cfg.name}-{shape.name}")
+    # Backward chain: unit U-1 (top) runs first.
+    prev = None
+    for u in reversed(range(U)):
+        deps = [prev] if prev else []
+        job.add_task(f"bwd{u}", load=bwd, deps=deps)
+        prev = f"bwd{u}"
+    if flat:
+        job.add_metaflow("g_all", flows=[(0, 1, xfer * U)], deps=["bwd0"])
+        for u in range(U):
+            job.add_task(f"opt{u}", load=opt_load, deps=["g_all"])
+    else:
+        for u in range(U):
+            job.add_metaflow(f"g{u}", flows=[(0, 1, xfer)],
+                             deps=[f"bwd{u}"])
+            job.add_task(f"opt{u}", load=opt_load, deps=[f"g{u}"])
+    job.validate()
+    return job
+
+
+def plan_step_comm(cfg: ModelConfig, shape: ShapeConfig, chips: int = 256,
+                   link_bw: float = LINK_BW) -> StepCommPlan:
+    from repro.models.transformer import n_units
+
+    U = n_units(cfg)
+    steps: dict[str, float] = {}
+    for policy, sched in (("msa", MSAScheduler()),
+                          ("varys", VarysScheduler()),
+                          ("fifo", FifoScheduler())):
+        job = build_train_dag(cfg, shape, chips, link_bw)
+        res = simulate([job], sched, n_ports=2)
+        steps[policy] = res.avg_jct
+        if policy == "msa":
+            finish = sorted(
+                ((t, name) for (jn, name), t in res.mf_finish.items()),
+                key=lambda x: x[0])
+            order = [int(name[1:]) for _, name in finish]
+    job = build_train_dag(cfg, shape, chips, link_bw, flat=True)
+    steps["flat"] = simulate([job], MSAScheduler(), n_ports=2).avg_jct
+
+    denom = max(steps["flat"] - steps["msa"], 0.0)
+    comm = U * unit_param_bytes(cfg) / chips / link_bw
+    overlap = min(denom / comm, 1.0) if comm > 0 else 0.0
+    return StepCommPlan(order=order, dag_steps=steps,
+                        bucket_bytes=unit_param_bytes(cfg) / chips,
+                        overlap_fraction=overlap)

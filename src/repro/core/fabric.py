@@ -1,0 +1,72 @@
+"""Big-switch fabric model with per-port ingress/egress capacities.
+
+The paper evaluates over an N x N datacenter fabric abstracted as one
+non-blocking switch where only the N ingress and N egress ports are
+contended (the standard coflow-literature model, cf. Varys).  Capacities
+are mutable so tests and the fault-tolerance benchmarks can degrade a
+port mid-run (straggling NIC / failing node).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.metaflow import EPS, Flow
+
+
+@dataclass
+class Fabric:
+    n_ports: int
+    egress: list[float] = field(default_factory=list)
+    ingress: list[float] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.egress:
+            self.egress = [1.0] * self.n_ports
+        if not self.ingress:
+            self.ingress = [1.0] * self.n_ports
+        if len(self.egress) != self.n_ports or len(self.ingress) != self.n_ports:
+            raise ValueError("capacity vectors must have n_ports entries")
+
+    def degrade(self, port: int, factor: float) -> None:
+        """Scale a port's capacity (straggler / partial link failure)."""
+        self.egress[port] *= factor
+        self.ingress[port] *= factor
+
+    def residual(self) -> "Residual":
+        return Residual(eg=list(self.egress), ing=list(self.ingress))
+
+
+@dataclass
+class Residual:
+    """Mutable leftover capacity during one rate-assignment round."""
+
+    eg: list[float]
+    ing: list[float]
+
+    def headroom(self, flow: Flow) -> float:
+        return max(0.0, min(self.eg[flow.src], self.ing[flow.dst]))
+
+    def take(self, flow: Flow, rate: float) -> None:
+        self.eg[flow.src] -= rate
+        self.ing[flow.dst] -= rate
+        # numeric hygiene: clamp tiny negatives
+        if -1e-6 < self.eg[flow.src] < 0:
+            self.eg[flow.src] = 0.0
+        if -1e-6 < self.ing[flow.dst] < 0:
+            self.ing[flow.dst] = 0.0
+        if self.eg[flow.src] < 0 or self.ing[flow.dst] < 0:
+            raise AssertionError("over-allocated port capacity")
+
+
+def backfill(flows: list[Flow], rates: dict[int, float], residual: Residual) -> None:
+    """Work-conserving backfill: hand leftover port bandwidth to flows in
+    priority order.  Both Varys and MSA are work-conserving; reproducing the
+    paper's Figure-1 arithmetic requires it (see DESIGN.md §8.4)."""
+    for f in flows:
+        if f.done:
+            continue
+        extra = residual.headroom(f)
+        if extra > EPS:
+            residual.take(f, extra)
+            rates[f.id] = rates.get(f.id, 0.0) + extra

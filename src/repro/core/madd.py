@@ -1,0 +1,87 @@
+"""MADD — Minimum Allocation for Desired Duration (Varys, SIGCOMM'14).
+
+Given a set of flows that should all finish *simultaneously* (because the
+downstream consumer needs every one of them — the JCT of a stage is the max
+over its reducers), MADD computes the slowest port bottleneck
+
+    gamma = max over ports of (port demand / port residual capacity)
+
+and allocates each flow rate = remaining / gamma.  Any rate profile that
+finishes some flow earlier wastes bandwidth that other coflows/metaflows
+could use; MADD is the minimal allocation achieving the bottleneck time.
+
+The paper's MSA adopts MADD verbatim for the per-metaflow bandwidth
+assignment step (Algorithm 1, line 11).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.core.fabric import Residual
+from repro.core.metaflow import EPS, Flow
+
+
+def madd_rates(flows: list[Flow], residual: Residual) -> dict[int, float]:
+    """Rates finishing all ``flows`` simultaneously within ``residual``.
+
+    Returns {} (all-zero) when any required port has no residual capacity —
+    the metaflow waits for this slot; work-conserving backfill may still
+    advance individual flows afterwards.  Deducts granted rates from
+    ``residual`` in place.
+    """
+    live = [f for f in flows if not f.done]
+    if not live:
+        return {}
+
+    dem_out: dict[int, float] = defaultdict(float)
+    dem_in: dict[int, float] = defaultdict(float)
+    for f in live:
+        dem_out[f.src] += f.remaining
+        dem_in[f.dst] += f.remaining
+
+    gamma = 0.0
+    for port, dem in dem_out.items():
+        cap = residual.eg[port]
+        if cap <= EPS:
+            return {}
+        gamma = max(gamma, dem / cap)
+    for port, dem in dem_in.items():
+        cap = residual.ing[port]
+        if cap <= EPS:
+            return {}
+        gamma = max(gamma, dem / cap)
+    if gamma <= EPS:
+        return {}
+
+    rates: dict[int, float] = {}
+    for f in live:
+        r = f.remaining / gamma
+        if r <= EPS:
+            continue
+        r = min(r, residual.headroom(f))  # numeric safety
+        if r <= EPS:
+            continue
+        residual.take(f, r)
+        rates[f.id] = r
+    return rates
+
+
+def bottleneck_time(flows: list[Flow], egress: list[float],
+                    ingress: list[float]) -> float:
+    """Varys' effective-bottleneck completion time on *full* port caps.
+
+    Used by SEBF ordering (smallest effective bottleneck first).
+    """
+    dem_out: dict[int, float] = defaultdict(float)
+    dem_in: dict[int, float] = defaultdict(float)
+    for f in flows:
+        if not f.done:
+            dem_out[f.src] += f.remaining
+            dem_in[f.dst] += f.remaining
+    gamma = 0.0
+    for port, dem in dem_out.items():
+        gamma = max(gamma, dem / egress[port] if egress[port] > EPS else float("inf"))
+    for port, dem in dem_in.items():
+        gamma = max(gamma, dem / ingress[port] if ingress[port] > EPS else float("inf"))
+    return gamma

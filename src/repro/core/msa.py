@@ -1,0 +1,186 @@
+"""MSA — the Metaflow Scheduling Algorithm (paper Algorithm 1).
+
+On every scheduling event (metaflow arrival or finish — and, in our
+simulator, compute finishes, since those can activate metaflows):
+
+  1. *Gain estimation* per active metaflow:
+       direct   — the metaflow alone unlocks computation:
+                    gain = unlocked_compute_load / remaining_size
+       indirect — the metaflow must wait for other unfinished metaflows:
+                    attribute = sum of remaining sizes of every metaflow the
+                    consumer transitively requires (smaller = closer to
+                    unlocking compute).
+  2. *Sort*: direct metaflows first (gain descending), then indirect
+     (attribute ascending).
+  3. *Bandwidth assignment*: walk the sorted list, MADD each metaflow on the
+     residual port capacity, then backfill leftovers (work conservation).
+
+Gain-numerator ambiguity (documented in DESIGN.md §8): the paper's Figure-2
+prose sums ``load_c2 + load_c4`` for MF2 although c4 also consumes MF4.  We
+implement both readings:
+
+  * ``gain_mode='unlockable'`` (default, self-consistent): sum loads of all
+    unfinished tasks whose *entire* unfinished-metaflow requirement is {m} —
+    exactly the compute that m alone unlocks, transitively.
+  * ``gain_mode='descendants'`` (literal Fig-2 arithmetic): sum loads of the
+    direct consumers plus all their unfinished compute descendants,
+    regardless of those descendants' other metaflow dependencies.
+
+Both reproduce the paper's quantitative Figure-1 result (avg JCT 7 vs
+Varys' 8); tests cover both.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.metaflow import EPS, JobDAG, Metaflow
+
+
+@dataclass(frozen=True)
+class MetaflowPriority:
+    """Sortable MSA priority record for one active metaflow."""
+
+    job: str
+    name: str
+    direct: bool
+    gain: float        # meaningful when direct
+    attribute: float   # meaningful when indirect
+
+    @property
+    def sort_key(self) -> tuple:
+        # Direct group strictly above indirect; within: gain desc / attr asc.
+        if self.direct:
+            return (0, -self.gain, self.job, self.name)
+        return (1, self.attribute, self.job, self.name)
+
+
+def _descendant_closure(job: JobDAG, roots: list[str]) -> set[str]:
+    """All unfinished compute tasks reachable (via dep edges) from roots."""
+    out: dict[str, list[str]] = {}
+    for t in job.tasks.values():
+        for d in t.deps:
+            out.setdefault(d, []).append(t.name)
+    seen: set[str] = set()
+    stack = list(roots)
+    while stack:
+        n = stack.pop()
+        for child in out.get(n, ()):
+            if child not in seen and not job.tasks[child].done:
+                seen.add(child)
+                stack.append(child)
+    return seen
+
+
+def metaflow_priorities(jobs: list[JobDAG], active: list[tuple[JobDAG, Metaflow]],
+                        gain_mode: str = "unlockable") -> list[MetaflowPriority]:
+    """Step 1+2 of MSA: gains for every active metaflow, sorted."""
+    prios: list[MetaflowPriority] = []
+    req_by_job = {j.name: j.unfinished_mf_requirements() for j in jobs}
+
+    for job, mf in active:
+        req = req_by_job[job.name]
+        consumers = job.consumers_of(mf.name)
+        # Direct iff some consumer's whole unfinished-metaflow need is {mf}.
+        direct_consumers = [c for c in consumers
+                            if not c.done and req[c.name] == frozenset({mf.name})]
+        if direct_consumers:
+            if gain_mode == "unlockable":
+                unlocked = [t for t in job.tasks.values()
+                            if not t.done and req[t.name] == frozenset({mf.name})]
+                load = sum(t.load for t in unlocked)
+            elif gain_mode == "descendants":
+                names = {c.name for c in direct_consumers}
+                names |= _descendant_closure(job, [c.name for c in direct_consumers])
+                load = sum(job.tasks[n].load for n in names)
+            else:
+                raise ValueError(f"unknown gain_mode {gain_mode!r}")
+            rem = max(mf.remaining, EPS)
+            prios.append(MetaflowPriority(job.name, mf.name, True, load / rem, 0.0))
+        else:
+            # Indirect: nearest consumer's total outstanding metaflow bytes.
+            attrs = []
+            for c in consumers:
+                if c.done:
+                    continue
+                need = req[c.name]
+                attrs.append(sum(job.metaflows[m].remaining for m in need))
+            attribute = min(attrs) if attrs else mf.remaining
+            prios.append(MetaflowPriority(job.name, mf.name, False, 0.0, attribute))
+
+    prios.sort(key=lambda p: p.sort_key)
+    return prios
+
+
+class MSAScheduler:
+    """Rate-assignment policy implementing paper Algorithm 1 + backfill.
+
+    Operates on the simulator's vectorized ``SchedView``; the priority logic
+    is the bitmask fast path of :func:`metaflow_priorities` (cross-checked by
+    a hypothesis property test).
+    """
+
+    name = "msa"
+
+    def __init__(self, gain_mode: str = "unlockable") -> None:
+        if gain_mode not in ("unlockable", "descendants"):
+            raise ValueError(f"unknown gain_mode {gain_mode!r}")
+        self.gain_mode = gain_mode
+
+    def _priorities(self, view) -> list[tuple[tuple, object]]:
+        keyed = []
+        bit_rem_cache: dict[str, dict[int, float]] = {}
+        attr_cache: dict[tuple[str, int], float] = {}
+        for rec in view.active:
+            job = rec.job
+            masks, mask_load = job.mf_masks()
+            bit = 1 << job.mf_bit(rec.name)
+            rem = max(view.mf_remaining(rec), EPS)
+            consumers = [c for c in job.consumers(rec.name)
+                         if not job.tasks[c].done]
+            direct = any(masks[c] == bit for c in consumers)
+            if direct:
+                if self.gain_mode == "unlockable":
+                    load = mask_load.get(bit, 0.0)
+                else:  # 'descendants' — literal Fig-2 arithmetic (reference)
+                    roots = [c for c in consumers if masks[c] == bit]
+                    names = set(roots) | _descendant_closure(job, roots)
+                    load = sum(job.tasks[n].load for n in names)
+                keyed.append(((0, -load / rem, job.name, rec.name), rec))
+            else:
+                if job.name not in bit_rem_cache:
+                    bit_rem_cache[job.name] = view.job_bit_remaining(job)
+                bit_rem = bit_rem_cache[job.name]
+                attr = float("inf")
+                for c in consumers:
+                    mask = masks[c]
+                    key = (job.name, mask)
+                    if key not in attr_cache:
+                        total, mm, b = 0.0, mask, 0
+                        while mm:
+                            if mm & 1:
+                                total += bit_rem[b]
+                            mm >>= 1
+                            b += 1
+                        attr_cache[key] = total
+                    attr = min(attr, attr_cache[key])
+                if attr == float("inf"):
+                    attr = rem
+                keyed.append(((1, attr, job.name, rec.name), rec))
+        keyed.sort(key=lambda kr: kr[0])
+        return keyed
+
+    def assign_rates(self, view):
+        rates = np.zeros_like(view.rem)
+        res_eg = view.egress.copy()
+        res_in = view.ingress.copy()
+        order = []
+        for _, rec in self._priorities(view):
+            view.madd(rec.flow_ix, res_eg, res_in, rates)
+            order.append(rec.flow_ix)
+        if order:
+            ordered = np.concatenate(order)
+            view.backfill(ordered, res_eg, res_in, rates)
+        return rates

@@ -1,0 +1,427 @@
+"""Event-driven fluid flow-level simulator over the big-switch fabric.
+
+The paper evaluates MSA with a flow-level simulator; this is that simulator,
+generalized to multi-stage DAGs (metaflows may have producer compute tasks)
+and multi-job arrival processes.
+
+Fluid model: between events, every flow transfers at a constant rate chosen
+by the pluggable scheduler and every runnable compute task progresses at the
+machine speed.  Events: job arrival, flow/metaflow completion, compute
+completion, and fabric perturbations (straggler injection).  Rates are
+recomputed at every event — the paper's Algorithm-1 trigger ("metaflow
+arrives or finishes") plus compute completions, which can activate
+producer-gated metaflows.
+
+Implementation notes (perf): flows live in flat numpy arrays (src / dst /
+remaining) grouped by metaflow; schedulers receive a ``SchedView`` and
+return a dense per-flow rate vector.  DAG bookkeeping (runnable frontier,
+unfinished-metaflow requirement bitmasks) is incremental — recomputed only
+when a node finishes, never per event.  This keeps wide Facebook-trace jobs
+(hundreds of reducers, thousands of flows) tractable in pure Python.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.fabric import Fabric
+from repro.core.metaflow import EPS, ComputeTask, JobDAG, Metaflow
+
+
+@dataclass
+class SimResult:
+    jct: dict[str, float]                 # job -> completion time (since arrival)
+    cct: dict[str, float]                 # job -> last-flow completion (since arrival)
+    mf_finish: dict[tuple[str, str], float]
+    task_finish: dict[tuple[str, str], float]
+    makespan: float
+    events: int
+    timeline: list[tuple[float, str]] = field(default_factory=list)
+
+    @property
+    def avg_jct(self) -> float:
+        return sum(self.jct.values()) / max(len(self.jct), 1)
+
+    @property
+    def avg_cct(self) -> float:
+        return sum(self.cct.values()) / max(len(self.cct), 1)
+
+
+@dataclass
+class Perturbation:
+    """Degrade a port's capacity at a given time (straggler injection)."""
+
+    time: float
+    port: int
+    factor: float
+
+
+@dataclass
+class ActiveMF:
+    """One schedulable metaflow: producers finished, flows outstanding."""
+
+    job: JobDAG
+    mf: Metaflow
+    name: str
+    ordinal: int          # global metaflow index
+    flow_ix: np.ndarray   # indices into the flow table
+
+
+@dataclass
+class SchedView:
+    """Everything a rate-assignment policy may look at for one round."""
+
+    t: float
+    n_ports: int
+    src: np.ndarray        # int32 [F]
+    dst: np.ndarray        # int32 [F]
+    rem: np.ndarray        # float64 [F] — remaining bytes per flow
+    egress: np.ndarray     # float64 [P] — full port capacities
+    ingress: np.ndarray
+    active: list[ActiveMF]
+    jobs: list[JobDAG]     # live (arrived, unfinished) jobs
+    mf_records: dict[str, list[ActiveMF]]  # job name -> ALL its mf records
+
+    def mf_remaining(self, a: ActiveMF) -> float:
+        return float(self.rem[a.flow_ix].sum())
+
+    def job_bit_remaining(self, job: JobDAG) -> dict[int, float]:
+        """Remaining bytes per metaflow *bit* for one job (active or not) —
+        the quantities MSA's indirect attributes sum over."""
+        out: dict[int, float] = {}
+        for rec in self.mf_records[job.name]:
+            out[job.mf_bit(rec.name)] = float(self.rem[rec.flow_ix].sum())
+        return out
+
+    # ---------------------------------------------------- shared primitives
+    def madd(self, flow_ix: np.ndarray, res_eg: np.ndarray,
+             res_in: np.ndarray, rates: np.ndarray) -> None:
+        """Vectorized MADD on residual capacity; writes into ``rates`` and
+        deducts from the residual vectors in place.  No-op when any required
+        port is exhausted (the metaflow waits; backfill may still run)."""
+        rem = self.rem[flow_ix]
+        live = rem > EPS
+        if not live.any():
+            return
+        ix = flow_ix[live]
+        rem = rem[live]
+        s = self.src[ix]
+        d = self.dst[ix]
+        dem_out = np.bincount(s, weights=rem, minlength=self.n_ports)
+        dem_in = np.bincount(d, weights=rem, minlength=self.n_ports)
+        used_out = dem_out > 0
+        used_in = dem_in > 0
+        if (res_eg[used_out] <= EPS).any() or (res_in[used_in] <= EPS).any():
+            return
+        gamma = max(
+            (dem_out[used_out] / res_eg[used_out]).max(initial=0.0),
+            (dem_in[used_in] / res_in[used_in]).max(initial=0.0))
+        if gamma <= EPS:
+            return
+        r = rem / gamma
+        rates[ix] += r
+        res_eg -= np.bincount(s, weights=r, minlength=self.n_ports)
+        res_in -= np.bincount(d, weights=r, minlength=self.n_ports)
+        np.clip(res_eg, 0.0, None, out=res_eg)
+        np.clip(res_in, 0.0, None, out=res_in)
+
+    def backfill(self, ordered_ix: np.ndarray, res_eg: np.ndarray,
+                 res_in: np.ndarray, rates: np.ndarray) -> None:
+        """Work-conserving backfill in priority order (sequential by
+        definition — each grant changes the residual seen by later flows)."""
+        rem = self.rem
+        src = self.src
+        dst = self.dst
+        eg = res_eg  # local aliases; mutate in place
+        ing = res_in
+        for i in ordered_ix:
+            if rem[i] <= EPS:
+                continue
+            h = eg[src[i]]
+            hi = ing[dst[i]]
+            if hi < h:
+                h = hi
+            if h > EPS:
+                rates[i] += h
+                eg[src[i]] -= h
+                ing[dst[i]] -= h
+
+    def bottleneck_time(self, flow_ix: np.ndarray) -> float:
+        """Varys' effective bottleneck on full port capacities (SEBF key)."""
+        rem = self.rem[flow_ix]
+        live = rem > EPS
+        if not live.any():
+            return 0.0
+        ix = flow_ix[live]
+        rem = rem[live]
+        dem_out = np.bincount(self.src[ix], weights=rem, minlength=self.n_ports)
+        dem_in = np.bincount(self.dst[ix], weights=rem, minlength=self.n_ports)
+        with np.errstate(divide="ignore"):
+            g_out = np.where(dem_out > 0, dem_out / self.egress, 0.0)
+            g_in = np.where(dem_in > 0, dem_in / self.ingress, 0.0)
+        return float(max(g_out.max(initial=0.0), g_in.max(initial=0.0)))
+
+
+class Simulator:
+    def __init__(self, fabric: Fabric, jobs: list[JobDAG], scheduler,
+                 machine_speed: float = 1.0,
+                 perturbations: list[Perturbation] | None = None,
+                 record_timeline: bool = False,
+                 max_events: int = 5_000_000) -> None:
+        for j in jobs:
+            j.validate()
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError("job names must be unique")
+        self.fabric = fabric
+        self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.name))
+        self.scheduler = scheduler
+        self.machine_speed = machine_speed
+        self.perturbations = sorted(perturbations or [], key=lambda p: p.time)
+        self.record_timeline = record_timeline
+        self.max_events = max_events
+        self._build_tables()
+
+    # ------------------------------------------------------------- tables
+    def _build_tables(self) -> None:
+        src: list[int] = []
+        dst: list[int] = []
+        rem: list[float] = []
+        self._mfs: list[ActiveMF] = []          # ordinal -> record
+        self._mf_of_job: dict[str, list[int]] = {}
+        for j in self.jobs:
+            for p in j.ports_used():
+                if not (0 <= p < self.fabric.n_ports):
+                    raise ValueError(
+                        f"job {j.name!r} uses port {p} outside fabric "
+                        f"0..{self.fabric.n_ports - 1}")
+            self._mf_of_job[j.name] = []
+            for name, mf in j.metaflows.items():
+                start = len(src)
+                for f in mf.flows:
+                    src.append(f.src)
+                    dst.append(f.dst)
+                    rem.append(f.remaining)
+                ix = np.arange(start, len(src), dtype=np.int64)
+                rec = ActiveMF(job=j, mf=mf, name=name,
+                               ordinal=len(self._mfs), flow_ix=ix)
+                self._mfs.append(rec)
+                self._mf_of_job[j.name].append(rec.ordinal)
+        self._src = np.asarray(src, dtype=np.int32)
+        self._dst = np.asarray(dst, dtype=np.int32)
+        self._rem = np.asarray(rem, dtype=np.float64)
+        self._flow_done = self._rem <= EPS
+        # Per-metaflow outstanding-flow counters.
+        self._mf_live = np.array([int((~self._flow_done[m.flow_ix]).sum())
+                                  for m in self._mfs], dtype=np.int64)
+        self._flow_mf = np.empty(len(src), dtype=np.int64)
+        for m in self._mfs:
+            self._flow_mf[m.flow_ix] = m.ordinal
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> SimResult:
+        t = 0.0
+        pending = list(self.jobs)
+        perts = list(self.perturbations)
+        timeline: list[tuple[float, str]] = []
+        mf_finish: dict[tuple[str, str], float] = {}
+        task_finish: dict[tuple[str, str], float] = {}
+        last_flow: dict[str, float] = {}
+        events = 0
+
+        live_jobs: list[JobDAG] = []
+        running: list[tuple[JobDAG, ComputeTask]] = []
+        active: dict[int, ActiveMF] = {}       # ordinal -> record
+        # Incremental DAG frontier state, built per job at arrival.
+        children: dict[str, dict[str, list[str]]] = {}
+        pending_deps: dict[str, dict[str, int]] = {}
+        unfinished_nodes: dict[str, int] = {}
+
+        def log(msg: str) -> None:
+            if self.record_timeline:
+                timeline.append((t, msg))
+
+        def node_finished(job: JobDAG, name: str) -> None:
+            """Cascade a node completion through the frontier."""
+            job.mark_dirty()
+            unfinished_nodes[job.name] -= 1
+            for child in children[job.name].get(name, ()):  # noqa: B023
+                pending_deps[job.name][child] -= 1
+                if pending_deps[job.name][child] == 0:
+                    activate(job, child)
+
+        def activate(job: JobDAG, name: str) -> None:
+            node = job.node(name)
+            if isinstance(node, ComputeTask):
+                node.start_time = t
+                running.append((job, node))
+                log(f"start {job.name}/{name}")
+            else:
+                rec = self._mfs[self._mf_ordinal(job, name)]
+                if self._mf_live[rec.ordinal] == 0:   # empty/zero metaflow
+                    finish_metaflow(rec)
+                else:
+                    active[rec.ordinal] = rec
+                    log(f"activate {job.name}/{name}")
+
+        def finish_metaflow(rec: ActiveMF) -> None:
+            rec.mf.finish_time = t
+            for f in rec.mf.flows:
+                f.remaining = 0.0
+            mf_finish[(rec.job.name, rec.name)] = t
+            last_flow[rec.job.name] = t
+            active.pop(rec.ordinal, None)
+            log(f"finish {rec.job.name}/{rec.name}")
+            node_finished(rec.job, rec.name)
+
+        def admit(job: JobDAG) -> None:
+            live_jobs.append(job)
+            ch: dict[str, list[str]] = {}
+            pend: dict[str, int] = {}
+            n_nodes = 0
+            for name in list(job.tasks) + list(job.metaflows):
+                node = job.node(name)
+                pend[name] = len(node.deps)
+                for d in node.deps:
+                    ch.setdefault(d, []).append(name)
+                n_nodes += 1
+            children[job.name] = ch
+            pending_deps[job.name] = pend
+            unfinished_nodes[job.name] = n_nodes
+            log(f"arrive {job.name}")
+            for name, k in pend.items():
+                if k == 0:
+                    activate(job, name)
+
+        while pending or live_jobs:
+            events += 1
+            if events > self.max_events:
+                raise RuntimeError("simulator exceeded max_events — livelock?")
+
+            while pending and pending[0].arrival <= t + EPS:
+                admit(pending.pop(0))
+
+            # ---- rates from the policy under test
+            act_list = list(active.values())
+            view = SchedView(
+                t=t, n_ports=self.fabric.n_ports,
+                src=self._src, dst=self._dst, rem=self._rem,
+                egress=np.asarray(self.fabric.egress, dtype=np.float64),
+                ingress=np.asarray(self.fabric.ingress, dtype=np.float64),
+                active=act_list, jobs=live_jobs,
+                mf_records={j.name: [self._mfs[o]
+                                     for o in self._mf_of_job[j.name]]
+                            for j in live_jobs})
+            if act_list:
+                rates = self.scheduler.assign_rates(view)
+                # Only active metaflows may transfer, whatever the policy says.
+                allowed = np.zeros(len(self._rem), dtype=bool)
+                for rec in act_list:
+                    allowed[rec.flow_ix] = True
+                rates = np.where(allowed, rates, 0.0)
+                self._check_capacity(rates, view)
+            else:
+                rates = np.zeros_like(self._rem)
+
+            # ---- next event horizon
+            dt = float("inf")
+            flowing = rates > EPS
+            if flowing.any():
+                dt = float((self._rem[flowing] / rates[flowing]).min())
+            for _, task in running:
+                dt = min(dt, task.remaining / self.machine_speed)
+            if pending:
+                dt = min(dt, pending[0].arrival - t)
+            if perts:
+                dt = min(dt, perts[0].time - t)
+
+            if dt == float("inf"):
+                blocked = [j.name for j in live_jobs]
+                raise RuntimeError(
+                    f"deadlock at t={t}: no progress possible for {blocked}")
+            dt = max(dt, 0.0)
+
+            # ---- advance the fluid state
+            t += dt
+            if flowing.any():
+                self._rem[flowing] -= rates[flowing] * dt
+                np.clip(self._rem, 0.0, None, out=self._rem)
+            if running:
+                for _, task in running:
+                    task.remaining = max(0.0, task.remaining
+                                         - self.machine_speed * dt)
+
+            while perts and perts[0].time <= t + EPS:
+                p = perts.pop(0)
+                self.fabric.degrade(p.port, p.factor)
+                log(f"degrade port {p.port} x{p.factor}")
+
+            # ---- commit flow / metaflow completions
+            newly = np.nonzero((self._rem <= EPS) & ~self._flow_done)[0]
+            if newly.size:
+                self._flow_done[newly] = True
+                for ordinal, cnt in zip(*np.unique(self._flow_mf[newly],
+                                                   return_counts=True)):
+                    self._mf_live[ordinal] -= cnt
+                    rec = self._mfs[ordinal]
+                    last_flow[rec.job.name] = t
+                    if self._mf_live[ordinal] == 0 and ordinal in active:
+                        finish_metaflow(rec)
+
+            # ---- commit compute completions
+            if running:
+                still: list[tuple[JobDAG, ComputeTask]] = []
+                for job, task in running:
+                    if task.remaining <= EPS:
+                        task.finish_time = t
+                        task_finish[(job.name, task.name)] = t
+                        log(f"finish {job.name}/{task.name}")
+                        node_finished(job, task.name)
+                    else:
+                        still.append((job, task))
+                running[:] = still
+
+            # ---- retire finished jobs
+            if any(unfinished_nodes[j.name] == 0 for j in live_jobs):
+                for j in [j for j in live_jobs if unfinished_nodes[j.name] == 0]:
+                    j.finish_time = t
+                    live_jobs.remove(j)
+                    log(f"done {j.name}")
+
+        jct = {j.name: (j.finish_time or 0.0) - j.arrival for j in self.jobs}
+        cct = {j.name: last_flow.get(j.name, j.arrival) - j.arrival
+               for j in self.jobs}
+        return SimResult(jct=jct, cct=cct, mf_finish=mf_finish,
+                         task_finish=task_finish, makespan=t, events=events,
+                         timeline=timeline)
+
+    def _mf_ordinal(self, job: JobDAG, name: str) -> int:
+        for o in self._mf_of_job[job.name]:
+            if self._mfs[o].name == name:
+                return o
+        raise KeyError((job.name, name))
+
+    def _check_capacity(self, rates: np.ndarray, view: SchedView) -> None:
+        """Invariant: the policy never oversubscribes a port."""
+        out = np.bincount(self._src, weights=rates, minlength=view.n_ports)
+        inn = np.bincount(self._dst, weights=rates, minlength=view.n_ports)
+        if (out > view.egress + 1e-6).any() or (inn > view.ingress + 1e-6).any():
+            bad = np.nonzero((out > view.egress + 1e-6)
+                             | (inn > view.ingress + 1e-6))[0]
+            raise AssertionError(f"port(s) {bad.tolist()} oversubscribed")
+
+
+def simulate(jobs: list[JobDAG], scheduler, n_ports: int | None = None,
+             fabric: Fabric | None = None, **kw) -> SimResult:
+    """Convenience wrapper: fresh fabric, run to completion.
+
+    Note: mutates the given job objects (remaining sizes, finish times);
+    build fresh jobs per run when comparing schedulers.
+    """
+    if fabric is None:
+        if n_ports is None:
+            n_ports = max(max(j.ports_used(), default=0) for j in jobs) + 1
+        fabric = Fabric(n_ports=n_ports)
+    return Simulator(fabric, jobs, scheduler, **kw).run()

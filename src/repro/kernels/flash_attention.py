@@ -1,0 +1,130 @@
+"""Flash attention Pallas TPU kernel: blocked online-softmax with GQA,
+causal and sliding-window masking.
+
+TPU adaptation (DESIGN.md §7): the grid is (batch, q-head, q-block,
+kv-block) with the kv-block dimension *sequential* ("arbitrary") so the
+running max / sum / accumulator live in VMEM scratch across kv steps —
+the TPU-idiomatic replacement for a CUDA shared-memory inner loop.  Block
+shapes are MXU-aligned (128 x head_dim); K/V blocks index through the
+grouped-KV head (h * KV // H) so GQA never materializes repeated heads.
+
+Layouts: q [B, H, Sq, hd]; k, v [B, KV, Sk, hd]; out like q.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Global positions of this tile (queries right-aligned when Sq < Sk).
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q) + (seq_k - seq_q)
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    # Tiles whose every (q, k) pair is masked are skipped entirely.
+    tile_live = True
+    if causal:
+        tile_live = (ik * block_k) <= (iq * block_q + block_q - 1
+                                       + (seq_k - seq_q))
+    if window:
+        tile_live = jnp.logical_and(
+            tile_live,
+            (ik * block_k + block_k - 1) > (iq * block_q + (seq_k - seq_q)
+                                            - window))
+
+    @pl.when(tile_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                 # [bq, bk]
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v,
+                                      preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q [B,H,Sq,hd]; k,v [B,KV,Sk,hd] -> [B,H,Sq,hd]."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    if H % KV:
+        raise ValueError(f"H={H} not divisible by KV={KV}")
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError("sequence not divisible by block size")
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    grid = (B, H, Sq // block_q, Sk // block_k)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_q=Sq, seq_k=Sk)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, KV=KV, H=H:
+                         (b, h * KV // H, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik, KV=KV, H=H:
+                         (b, h * KV // H, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (the
+kernel body runs in Python per grid cell — bit-accurate to the TPU
+lowering semantics); on TPU set ``REPRO_PALLAS_INTERPRET=0``.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import fused_ce as _ce
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,S,H,hd], k/v [B,S,KV,hd] (model layout) -> [B,S,H,hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256):
+    """Mamba-2 SSD over [B,S,H,P]; returns (y, final_state fp32)."""
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         interpret=_interpret())
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    return _rn.rmsnorm(x, scale, interpret=_interpret())
+
+
+@jax.jit
+def fused_cross_entropy(logits, labels):
+    """Blocked online-logsumexp CE over [T, V]; returns per-row NLL fp32."""
+    return _ce.fused_cross_entropy(logits, labels, interpret=_interpret())

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q [B,H,Sq,hd], k/v [B,KV,Sk,hd] (KV divides H) -> [B,H,Sq,hd]."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kx,
+                   preferred_element_type=jnp.float32) * scale
+    qi = jnp.arange(Sq)[:, None] + (Sk - Sq)   # right-aligned positions
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, initial_state=None):
+    """Sequential SSD recurrence (the semantic definition, O(S) steps).
+
+    x [B,S,H,P], dt [B,S,H] (post-softplus), A [H], Bm/Cm [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp           # [B,H,P] [B,H] [B,N] [B,N]
+        decay = jnp.exp(dtt * A[None, :])                       # [B,H]
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xt.astype(jnp.float32),
+                         bt.astype(jnp.float32), dtt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, initial_state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def cross_entropy_ref(logits, labels):
+    """Per-row NLL in fp32 (labels clamped at 0; callers mask negatives)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[:, None],
+                             axis=-1)[:, 0]
+    return lse - ll

@@ -1,0 +1,124 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: (batch, head-block, chunk) with the chunk dimension sequential
+("arbitrary") — the [head_block, P, N] recurrent state lives in VMEM
+scratch across chunks, exactly the cross-chunk recurrence of the SSD
+algorithm (Dao & Gu 2024, Listing 1).  Within a chunk the dual quadratic
+form runs as dense MXU matmuls on [Q, Q] / [Q, N] / [Q, P] tiles.
+
+TPU adaptation notes (DESIGN.md §7): the CUDA SSD kernel leans on warp
+shuffles for the intra-chunk cumsum; here the cumsum/segsum is a jnp op on
+an MXU/VPU-friendly [Q, hb] tile, and chunking doubles as the VMEM tiling.
+B/C are shared across heads (n_groups=1), so they load once per chunk per
+head-block.
+
+Layouts: x [B, S, H, P]; dt (post-softplus) [B, S, H]; A [H];
+Bm, Cm [B, S, N].  Outputs: y like x; final state [B, H, P, N] fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum(dA):
+    """dA [Q, hb] -> lower-tri exp-arg matrix [hb, Q, Q] (=-inf above)."""
+    Q = dA.shape[0]
+    cs = jnp.cumsum(dA, axis=0)                       # [Q, hb]
+    diff = cs.T[:, :, None] - cs.T[:, None, :]        # [hb, Q, Q]
+    mask = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    return jnp.where(mask[None], diff, -jnp.inf)
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref,
+                state_scr, *, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, hb, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q, hb]
+    A = a_ref[...].astype(jnp.float32)        # [hb]
+    Bm = b_ref[0].astype(jnp.float32)         # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)         # [Q, N]
+
+    dA = dt * A[None, :]                      # [Q, hb]
+    csum = jnp.cumsum(dA, axis=0)
+    xdt = x * dt[:, :, None]
+
+    # Intra-chunk dual form.
+    L = jnp.exp(_segsum(dA))                                  # [hb, Q, Q]
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("qk,hqk,khp->qhp", scores, L, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # Contribution of the state entering this chunk.
+    state = state_scr[...]                                    # [hb, P, N]
+    y_off = jnp.einsum("qn,qh,hpn->qhp", Cm, jnp.exp(csum), state,
+                       preferred_element_type=jnp.float32)
+
+    # State update for the next chunk.
+    total = dA.sum(axis=0)                                    # [hb]
+    decay_end = jnp.exp(total[None, :] - csum)                # [Q, hb]
+    chunk_state = jnp.einsum("kn,kh,khp->hpn", Bm, decay_end, xdt,
+                             preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(total)[:, None, None] + chunk_state
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        st_ref[0] = state_scr[...]
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256, head_block: int = 8,
+             interpret: bool = False):
+    """Pallas SSD.  Shapes as in the module docstring."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"seq {S} not divisible by chunk {chunk}")
+    head_block = min(head_block, H)
+    if H % head_block:
+        raise ValueError(f"heads {H} not divisible by head_block {head_block}")
+    nc = S // chunk
+    grid = (B, H // head_block, nc)
+
+    kern = functools.partial(_ssd_kernel, nc=nc)
+    y, st = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, head_block, P),
+                         lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, head_block),
+                         lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((head_block,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, head_block, P),
+                         lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, head_block, P, N),
+                         lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((head_block, P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, st

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the model + optimizer state as ShapeDtypeStructs (no alloc),
+  2. jits the right step (train_step / prefill / decode) with the
+     production sharding specs,
+  3. ``.lower().compile()`` against the target mesh — compile success is
+     the proof the distribution config is coherent,
+  4. records memory_analysis(), cost_analysis() and the HLO collective
+     mix, plus reduced-depth UNROLLED compiles for depth-exact roofline
+     extrapolation (see repro/roofline/analysis.py),
+  5. writes one JSON per cell under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all                # single-pod, 33 cells
+  python -m repro.launch.dryrun --all --multi-pod    # 2x16x16 sweep
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config, shapes_for
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh, mesh_device_count
+from repro.launch.specs import decode_specs, prefill_specs, train_specs
+from repro.models import get_model
+from repro.models.scan_config import unroll_unit_scans
+from repro.models.transformer import n_units, unit_layout
+from repro.optim.adamw import AdamW
+from repro.parallel import axes as ax
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     state_specs)
+from repro.roofline.analysis import (RooflineTerms, extrapolate,
+                                     model_flops_per_step,
+                                     total_collective_bytes)
+from repro.train.state import state_struct
+from repro.train.step import make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _depth_variant(cfg: ModelConfig, units: int) -> ModelConfig:
+    per_unit = len(unit_layout(cfg)) if cfg.family != "encdec" else 1
+    kw = {"n_layers": units * per_unit}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = units
+    return dataclasses.replace(cfg, **kw)
+
+
+def auto_microbatches(B: int, S: int, dp: int, target: int = 8192) -> int:
+    """Smallest divisor of B so each microbatch is <= ~target tokens/device."""
+    want = max(1, -(-B * S // dp) // target)
+    for m in range(want, B + 1):
+        if B % m == 0:
+            return m
+    return B
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                microbatches: int = 1):
+    """Build (jitted_fn, example_structs) for one cell on the given mesh."""
+    model = get_model(cfg, context_parallel=(shape.name == "long_500k"))
+    if shape.kind == "train":
+        opt = AdamW()
+        step = make_train_step(model, opt, microbatches=microbatches)
+        state = state_struct(model, opt)
+        batch = train_specs(cfg, shape)
+        in_sh = (state_specs(state, mesh), batch_specs(batch, mesh))
+        fn = jax.jit(step, in_shardings=in_sh, donate_argnums=0)
+        return fn, (state, batch)
+    if shape.kind == "prefill":
+        batch = prefill_specs(cfg, shape)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        in_sh = (param_specs(params, mesh), batch_specs(batch, mesh))
+        fn = jax.jit(lambda p, b: model.prefill(p, b, shape.seq_len),
+                     in_shardings=in_sh)
+        return fn, (params, batch)
+    # decode
+    token, cache = decode_specs(cfg, shape, get_model(cfg))
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cp = shape.name == "long_500k"
+    in_sh = (param_specs(params, mesh), batch_specs(token, mesh),
+             cache_specs(cache, mesh, context_parallel=cp))
+    fn = jax.jit(model.decode, in_shardings=in_sh, donate_argnums=2)
+    return fn, (params, token, cache)
+
+
+def _compile(cfg, shape, mesh, unroll: bool, microbatches: int = 1):
+    ctx_unroll = unroll_unit_scans() if unroll else _null()
+    with jax.set_mesh(mesh), ax.logical_mesh(mesh.axis_names), \
+            ctx_unroll:
+        fn, args = _lower_cell(cfg, shape, mesh, microbatches=microbatches)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             depth_probe: tuple[int, int] = (2, 4)) -> dict:
+    cfg = get_config(arch)
+    shape = shapes_for(cfg)[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_device_count(mesh)
+    dp = chips // 16   # data-parallel ways (model axis is 16 on both meshes)
+    micro = (auto_microbatches(shape.global_batch, shape.seq_len, dp)
+             if shape.kind == "train" else 1)
+    t0 = time.time()
+
+    # 1. Full-depth compile: success proof + memory analysis.
+    compiled = _compile(cfg, shape, mesh, unroll=False, microbatches=micro)
+    mem = compiled.memory_analysis()
+    full_cost = compiled.cost_analysis()
+    compile_s = time.time() - t0
+
+    # 2. Reduced-depth UNROLLED compiles for depth-true flops/bytes/coll.
+    #    microbatches=1 here so loop-hidden collectives are all visible;
+    #    cost_analysis is PER DEVICE (SPMD module) -> scale by chips.
+    a_u, b_u = depth_probe
+    probes = {}
+    for u in (a_u, b_u):
+        c = _compile(_depth_variant(cfg, u), shape, mesh, unroll=True)
+        probes[u] = {
+            "flops": float(c.cost_analysis().get("flops", 0.0)) * chips,
+            "bytes": float(c.cost_analysis().get("bytes accessed", 0.0))
+                     * chips,
+            "coll": float(total_collective_bytes(c.as_text())) * chips,
+        }
+    U = cfg.n_layers if cfg.family == "encdec" else n_units(cfg)
+    flops = extrapolate(a_u, probes[a_u]["flops"], b_u, probes[b_u]["flops"], U)
+    hbm = extrapolate(a_u, probes[a_u]["bytes"], b_u, probes[b_u]["bytes"], U)
+    coll = extrapolate(a_u, probes[a_u]["coll"], b_u, probes[b_u]["coll"], U)
+
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                          chips=chips)
+    mf = model_flops_per_step(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "compile_s": round(compile_s, 1),
+        "microbatches": micro,
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+        },
+        "cost_full_compile": {k: full_cost.get(k) for k in
+                              ("flops", "bytes accessed")},
+        "depth_probes": probes,
+        "roofline": terms.as_dict(),
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / flops) if flops else None,
+        "ok": True,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape_name in shapes_for(get_config(arch)):
+                cells.append((arch, shape_name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("need --arch and --shape (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    mesh_tag = "multi" if args.multi_pod else "single"
+    failures = 0
+    for arch, shape_name in cells:
+        tag = f"{arch}__{shape_name}__{mesh_tag}"
+        path = out_dir / f"{tag}.json"
+        t0 = time.time()
+        try:
+            res = run_cell(arch, shape_name, multi_pod=args.multi_pod)
+            print(f"[ok]   {tag}: compile {res['compile_s']}s "
+                  f"dominant={res['roofline']['dominant']} "
+                  f"useful={res['useful_flops_ratio']:.3f}"
+                  if res["useful_flops_ratio"] else f"[ok] {tag}")
+        except Exception as e:  # noqa: BLE001 — record and continue sweep
+            res = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:],
+                   "elapsed_s": round(time.time() - t0, 1)}
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+        path.write_text(json.dumps(res, indent=2, default=str))
+    print(f"\n{len(cells) - failures}/{len(cells)} cells compiled "
+          f"({mesh_tag}-pod mesh)")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

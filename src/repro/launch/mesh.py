@@ -1,0 +1,40 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; dryrun.py sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then builds these meshes from host placeholder devices.
+
+  single-pod: (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod:  (pod=2, data=16, model=16)     — 512 chips across 2 pods
+
+The ``pod`` axis is pure data parallelism (DCN-friendly: parameters are
+replicated per pod; only gradient all-reduce crosses pods).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_test_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
+    """Small mesh for CI-scale sharding tests (host device count >= 4)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def mesh_device_count(mesh: jax.sharding.Mesh) -> int:
+    out = 1
+    for s in mesh.axis_sizes:
+        out *= s
+    return out

@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns (batch_struct, meta) where every leaf is
+a ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable, zero allocation.
+Modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, llava gets patch embeddings; both inside the assigned
+``seq_len`` budget.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        return {
+            "frames": SDS((B, S, cfg.d_model), dt),
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision_patches":
+        S_text = S - cfg.n_prefix_tokens
+        return {
+            "tokens": SDS((B, S_text), jnp.int32),
+            "labels": SDS((B, S_text), jnp.int32),
+            "prefix": SDS((B, cfg.n_prefix_tokens, cfg.d_model), dt),
+        }
+    return {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        return {
+            "frames": SDS((B, S, cfg.d_model), dt),
+            "tokens": SDS((B, S), jnp.int32),
+        }
+    if cfg.frontend == "vision_patches":
+        return {
+            "tokens": SDS((B, S - cfg.n_prefix_tokens), jnp.int32),
+            "prefix": SDS((B, cfg.n_prefix_tokens, cfg.d_model), dt),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model) -> tuple:
+    """(token_struct, cache_struct): one new token against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    token = SDS((B, 1), jnp.int32)
+    if cfg.family == "encdec":
+        # Cross-attention K/V depend on encoder output: get the cache
+        # structure from eval_shape(prefill) — still zero allocation.
+        _, cache = jax.eval_shape(
+            lambda p, b: model.prefill(p, b, S),
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)),
+            prefill_specs(cfg, shape))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return token, cache

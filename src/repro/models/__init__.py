@@ -1,0 +1,5 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec backbones in pure JAX."""
+
+from repro.models.registry import Model, get_model
+
+__all__ = ["Model", "get_model"]

@@ -1,0 +1,268 @@
+"""GQA attention with RoPE, sliding-window masking, and KV caches.
+
+Three entry points per layer:
+  * ``attend_train``   — full-sequence causal (or bidirectional) attention.
+  * ``attend_prefill`` — same math, also returns the KV cache.
+  * ``attend_decode``  — one-token step against a cache (ring buffer for
+    sliding-window layers, linear buffer otherwise), optionally
+    context-parallel over the cache's sequence axis.
+
+The jnp math here doubles as the oracle for ``repro.kernels.flash_attention``
+(`use_pallas=True` swaps the inner product loop for the Pallas kernel on
+TPU; the CPU container always uses the jnp path).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (apply_rotary, causal_mask, rotary_cos_sin,
+                                 sliding_mask)
+from repro.parallel import axes as ax
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, C, KV, hd]  (C = cache length)
+    v: jax.Array          # [B, C, KV, hd]
+    length: jax.Array     # [] int32 — tokens written so far (absolute)
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> dict:
+    from repro.models.common import dense_init
+
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, (H * hd,), dtype),
+        "wk": dense_init(ks[1], D, (KV * hd,), dtype),
+        "wv": dense_init(ks[2], D, (KV * hd,), dtype),
+        "wo": dense_init(ks[3], H * hd, (D,), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    return q, k, v
+
+
+CHUNKED_SDPA_THRESHOLD = 8192   # materialized-scores limit (see §Perf it. 5)
+
+
+def _sdpa_block(q, k, v, mask, hd):
+    """One query block: q [B,Sq,KV,G,hd] vs full k/v [B,Skv,KV,hd]."""
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(scores.dtype)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :, :], scores,
+                           jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """[B,Sq,H,hd] x [B,Skv,KV,hd] -> [B,Sq,H,hd] with GQA head grouping.
+
+    Long sequences process queries in chunks under ``lax.map`` so only one
+    [B, chunk, Skv] score block is live at a time — the jnp analogue of the
+    Pallas flash kernel's tiling (whisper/llava 32k prefill would otherwise
+    materialize hundreds of GB of scores; EXPERIMENTS.md §Perf iteration 5).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, hd)
+    if Sq <= CHUNKED_SDPA_THRESHOLD:
+        out = _sdpa_block(q, k, v, mask, hd)
+        return out.reshape(B, Sq, H, hd)
+
+    chunk = CHUNKED_SDPA_THRESHOLD // 4
+    while Sq % chunk:
+        chunk //= 2
+    nb = Sq // chunk
+    qcT = q.reshape(B, nb, chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    if mask is None:
+        out = jax.lax.map(lambda qb: _sdpa_block(qb, k, v, None, hd), qcT)
+    else:
+        mc = mask.reshape(nb, chunk, mask.shape[-1])
+        out = jax.lax.map(lambda a: _sdpa_block(a[0], k, v, a[1], hd),
+                          (qcT, mc))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+
+
+def attend_train(p, x, cfg: ModelConfig, *, is_causal: bool = True,
+                 use_pallas: bool = False):
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.rope_theta > 0:
+        pos = jnp.arange(S)
+        cos, sin = rotary_cos_sin(pos, cfg.hd, cfg.rope_theta, x.dtype)
+        q = apply_rotary(q, cos, sin)
+        k = apply_rotary(k, cos, sin)
+    q = ax.shard(q, ax.BATCH, None, ax.TP, None)
+    k = ax.shard(k, ax.BATCH, None, ax.TP if cfg.n_kv_heads > 1 else None, None)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=is_causal,
+                                   window=cfg.sliding_window)
+    else:
+        if not is_causal:
+            mask = None
+        elif cfg.sliding_window:
+            mask = sliding_mask(S, S, 0, cfg.sliding_window)
+        else:
+            mask = causal_mask(S, S, 0)
+        out = _sdpa(q, k, v, mask, cfg)
+    out = ax.shard(out, ax.BATCH, None, ax.TP, None)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    """Sliding-window layers keep a ring buffer of window size."""
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> KVCache:
+    C = cache_len(cfg, max_seq)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, C, KV, hd), dtype),
+        v=jnp.zeros((batch, C, KV, hd), dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def attend_prefill(p, x, cfg: ModelConfig, max_seq: int):
+    """Full-sequence pass that also materializes the decode cache."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if cfg.rope_theta > 0:
+        pos = jnp.arange(S)
+        cos, sin = rotary_cos_sin(pos, cfg.hd, cfg.rope_theta, x.dtype)
+        q = apply_rotary(q, cos, sin)
+        k_rot = apply_rotary(k, cos, sin)
+    else:
+        k_rot = k
+    if cfg.sliding_window:
+        mask = sliding_mask(S, S, 0, cfg.sliding_window)
+    else:
+        mask = causal_mask(S, S, 0)
+    out = _sdpa(q, k_rot, v, mask, cfg)
+    y = out.reshape(B, S, -1) @ p["wo"]
+
+    C = cache_len(cfg, max_seq)
+    if C >= S:
+        pad = C - S
+        ck = jnp.pad(k_rot, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:  # ring buffer: keep the last C positions, aligned to pos % C
+        start = S - C
+        ck = jnp.roll(k_rot[:, start:], shift=S % C, axis=1)
+        cv = jnp.roll(v[:, start:], shift=S % C, axis=1)
+    cache = KVCache(k=ck, v=cv, length=jnp.asarray(S, jnp.int32))
+    return y, cache
+
+
+def attend_decode(p, x, cache: KVCache, cfg: ModelConfig,
+                  context_parallel: bool = False):
+    """One-token step: x [B, 1, D] against the cache.
+
+    With ``context_parallel=True`` the cache's sequence axis is sharded over
+    the data mesh axis (CP decode for batch=1 long-context shapes) — the
+    softmax is computed shard-locally and combined exactly via a log-sum-exp
+    weighted psum expressed with jnp ops (GSPMD inserts the collective).
+    """
+    B = x.shape[0]
+    C = cache.k.shape[1]
+    q, k, v = _project_qkv(p, x, cfg)
+    pos = cache.length  # absolute position of the new token
+    if cfg.rope_theta > 0:
+        cos, sin = rotary_cos_sin(pos[None], cfg.hd, cfg.rope_theta, x.dtype)
+        q = apply_rotary(q, cos[None], sin[None])
+        k = apply_rotary(k, cos[None], sin[None])
+
+    slot = (pos % C).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+
+    # Mask: valid positions are those already written.  For a sliding-window
+    # ring buffer every slot holds one of the last C positions once
+    # length >= C; before that, slots > length are still empty.
+    kv_pos = jnp.arange(C)
+    if cfg.sliding_window:
+        valid = jnp.where(pos >= C, jnp.ones((C,), bool), kv_pos <= pos)
+    else:
+        valid = kv_pos <= pos
+
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    qh = q.reshape(B, KV, G, hd)
+    if context_parallel:
+        # CP decode (batch=1 long-context): shard the cache sequence axis
+        # over data x model; batch stays unsharded.  (Perf iteration 3:
+        # originally data-only; see EXPERIMENTS.md §Perf.)
+        ck = ax.shard(ck, None, ax.CPTP, None, None)
+        cv = ax.shard(cv, None, ax.CPTP, None, None)
+    else:
+        # Batched decode: batch over DP and the cache sequence over the
+        # model axis — the KV cache dominates decode HBM (measured 76-163
+        # GB/device when only batch-sharded; §Perf iteration 3).
+        ck = ax.shard(ck, ax.BATCH, ax.TP, None, None)
+        cv = ax.shard(cv, ax.BATCH, ax.TP, None, None)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qh, ck,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(scores.dtype)
+    scores = jnp.where(valid[None, None, None, :], scores,
+                       jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, cv).reshape(B, 1, H * hd)
+    y = out @ p["wo"]
+    return y, KVCache(k=ck, v=cv, length=pos + 1)
+
+
+def init_cross_attn(key, cfg: ModelConfig, dtype) -> dict:
+    return init_attn(key, cfg, dtype)
+
+
+def attend_cross(p, x, enc_kv, cfg: ModelConfig):
+    """Decoder cross-attention over precomputed encoder K/V [B,Se,KV,hd]."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(1, 1, H, hd)
+    k, v = enc_kv
+    out = _sdpa(q, k, v, None, cfg)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def encode_kv(p, enc_out, cfg: ModelConfig):
+    B, Se, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p["wk"]).reshape(B, Se, KV, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, KV, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].reshape(1, 1, KV, hd)
+        v = v + p["bv"].reshape(1, 1, KV, hd)
+    return k, v

@@ -1,0 +1,69 @@
+"""Shared model utilities: initializers, norms, rotary embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, in_dim: int, out_shape: tuple[int, ...], dtype) -> jax.Array:
+    """Truncated-normal fan-in init (LLaMA-style 1/sqrt(fan_in))."""
+    std = 1.0 / np.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -3, 3, (in_dim,) + out_shape,
+                                        jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -3, 3, (vocab, dim), jnp.float32)
+            ).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm in fp32 accumulation (the standard production recipe)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rotary_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                   dtype) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for the given absolute positions [..., S]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; cos/sin: [B, S, half] or [S, half]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """[q_len, kv_len] bool: query i attends kv j iff j <= i + offset."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return kj <= qi
+
+
+def sliding_mask(q_len: int, kv_len: int, q_offset, window: int) -> jax.Array:
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return (kj <= qi) & (kj > qi - window)

@@ -1,0 +1,213 @@
+"""Mamba-2 (SSD — state-space duality) mixer block.
+
+Follows the minimal SSD formulation of Dao & Gu (arXiv:2405.21060): the
+sequence is processed in chunks; within a chunk the dual quadratic
+(attention-like) form runs on the MXU, while a cross-chunk recurrence
+carries the [H, P, N] state.  ``ssd_scan`` here is the pure-jnp oracle that
+``repro.kernels.ssd_scan`` (Pallas) is validated against; model code uses
+this path on CPU.
+
+Decode keeps an O(1) recurrent state (conv tail + SSM state) — the reason
+mamba2/jamba run the ``long_500k`` cell at all.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm
+from repro.parallel import axes as ax
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # [B, K-1, conv_ch] — last K-1 pre-conv inputs
+    ssm: jax.Array    # [B, H, P, N] — recurrent state
+    length: jax.Array
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    d_in = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    ch = conv_channels(cfg)
+    ks = jax.random.split(key, 4)
+    # in_proj -> [z (d_in) | x (d_in) | B (N) | C (N) | dt (H)]
+    return {
+        "in_proj": dense_init(ks[0], D, (2 * d_in + 2 * N + H,), dtype),
+        "conv_w": dense_init(ks[1], K, (ch,), dtype).reshape(K, ch),
+        "conv_b": jnp.zeros((ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[3], d_in, (D,), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_in, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, state_tail=None):
+    """Depthwise causal conv, window K.  state_tail: [B, K-1, ch] or None."""
+    K, ch = w.shape
+    if state_tail is not None:
+        xBC = jnp.concatenate([state_tail.astype(xBC.dtype), xBC], axis=1)
+        pad = 0
+    else:
+        pad = K - 1
+    x = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+    out = sum(x[:, i:x.shape[1] - (K - 1 - i)] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Minimal SSD (paper Listing 1), batched.
+
+    x:  [B, S, H, P]    dt: [B, S, H]   A: [H]
+    Bm: [B, S, N]       Cm: [B, S, N]   (n_groups = 1, shared across heads)
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    import math
+
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        Q = math.gcd(S, Q)   # short/ragged sequences: shrink the chunk
+    nc = S // Q
+
+    dtA = (dt * A[None, None, :]).astype(jnp.float32)         # [B,S,H]
+    xdt = (x * dt[..., None].astype(x.dtype))                 # [B,S,H,P]
+
+    # chunked views, chunk-major for the scan
+    c = lambda t: (t.reshape(Bsz, nc, Q, *t.shape[2:])
+                   .transpose(1, 0, *range(2, t.ndim + 1)))
+    xc, dtAc = c(xdt), c(dtA)                                 # [nc,B,Q,...]
+    Bc, Cc = c(Bm), c(Cm)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def chunk_step(carry, inp):
+        """One chunk: intra-chunk dual form + state recurrence.
+
+        Working set is one chunk only ([B,H,Q,Q] decay matrix) — the
+        all-chunks-at-once formulation would materialize B*nc*H*Q^2 floats.
+        """
+        xq, dA, Bq, Cq = inp          # [B,Q,H,P] [B,Q,H] [B,Q,N] [B,Q,N]
+        csum = jnp.cumsum(dA, axis=1)                          # [B,Q,H]
+        # 1. diagonal block: Y = (C B^T ⊙ L) X
+        L = jnp.exp(segsum(dA.transpose(0, 2, 1)))             # [B,H,Q,Q]
+        scores = jnp.einsum("bqn,bkn->bqk", Cq, Bq)            # [B,Q,Q]
+        y_diag = jnp.einsum("bqk,bhqk,bkhp->bqhp",
+                            scores.astype(jnp.float32), L,
+                            xq.astype(jnp.float32))
+        # 2. contribution of the incoming state
+        state_decay = jnp.exp(csum)                            # [B,Q,H]
+        y_off = jnp.einsum("bqn,bqh,bhpn->bqhp",
+                           Cq.astype(jnp.float32), state_decay, carry)
+        # 3. state update
+        total = dA.sum(axis=1)                                 # [B,H]
+        decay_end = jnp.exp(total[:, None, :] - csum)          # [B,Q,H]
+        chunk_state = jnp.einsum("bkn,bkh,bkhp->bhpn",
+                                 Bq.astype(jnp.float32), decay_end,
+                                 xq.astype(jnp.float32))
+        new = carry * jnp.exp(total)[..., None, None] + chunk_state
+        return new, (y_diag + y_off).astype(x.dtype)
+
+    final, yc = jax.lax.scan(chunk_step, initial_state, (xc, dtAc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def mamba_forward(p, u, cfg: ModelConfig, state: MambaState | None = None):
+    """Full-sequence mixer: u [B, S, D] -> (y [B, S, D], final MambaState)."""
+    B, S, D = u.shape
+    d_in, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    tail_in = state.conv if state is not None else None
+    xBC_pre = xBC
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"], tail_in)
+    x = xBC[..., :d_in].reshape(B, S, H, P)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    x = ax.shard(x, ax.BATCH, None, ax.TP, None)
+
+    A = -jnp.exp(p["A_log"])
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    init_ssm = state.ssm if state is not None else None
+    y, final = ssd_scan(x, dt_s, A, Bm, Cm, cfg.ssm_chunk,
+                        initial_state=init_ssm)
+    y = y + x * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    K = cfg.ssm_conv
+    tail_src = (jnp.concatenate([tail_in.astype(xBC_pre.dtype), xBC_pre],
+                                axis=1) if state is not None else
+                jnp.pad(xBC_pre, ((0, 0), (K - 1, 0), (0, 0))))
+    new_tail = tail_src[:, -(K - 1):]
+    length = (state.length if state is not None
+              else jnp.zeros((), jnp.int32)) + S
+    return out, MambaState(conv=new_tail, ssm=final, length=length)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_channels(cfg)), dtype),
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def mamba_decode(p, u, cfg: ModelConfig, state: MambaState):
+    """Single-token recurrent step: u [B, 1, D] -> (y [B, 1, D], state)."""
+    B = u.shape[0]
+    d_in, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)                     # [B,1,*]
+    window = jnp.concatenate([state.conv.astype(xBC.dtype), xBC], axis=1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    x = conv_out[:, :d_in].reshape(B, H, P)
+    Bm = conv_out[:, d_in:d_in + N]
+    Cm = conv_out[:, d_in + N:]
+
+    A = -jnp.exp(p["A_log"])
+    dt_s = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    decay = jnp.exp(dt_s * A[None, :])                        # [B,H]
+    upd = jnp.einsum("bhp,bn,bh->bhpn", x.astype(jnp.float32), Bm.astype(jnp.float32), dt_s)
+    ssm = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm.astype(jnp.float32))
+    y = y.astype(u.dtype) + x * p["D"][None, :, None].astype(u.dtype)
+    y = y.reshape(B, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, MambaState(conv=window[:, 1:], ssm=ssm,
+                           length=state.length + 1)

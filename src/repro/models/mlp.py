@@ -1,0 +1,26 @@
+"""Dense FFN (SwiGLU) with tensor-parallel hidden dimension."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.parallel import axes as ax
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], D, (F,), dtype),
+        "w_up": dense_init(ks[1], D, (F,), dtype),
+        "w_down": dense_init(ks[2], F, (D,), dtype),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = ax.shard(h, ax.BATCH, None, ax.TP)
+    return h @ p["w_down"]

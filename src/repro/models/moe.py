@@ -1,0 +1,159 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style grouped dispatch.
+
+Dispatch is the grouped one-hot-einsum formulation (GShard / MaxText): the
+token stream is grouped along the batch dimension, each group dispatches
+into a per-expert capacity buffer via einsum, experts run as one batched
+matmul over [E, ...], and results scatter back weighted by router probs.
+This formulation is fully GSPMD-legible:
+
+  * ``moe_sharding='tp'`` (default): expert FFN hidden dim sharded over the
+    ``model`` axis (TP-within-expert — correct for any expert count,
+    including mixtral's 8 < 16 mesh shards); dispatch stays local to the
+    data shard — no all-to-all.
+  * ``moe_sharding='ep'``: the capacity buffer's expert axis sharded over
+    ``model`` — GSPMD materializes the dispatch/combine as all-to-alls
+    (the classic expert-parallel pattern; needs n_experts >= mesh model
+    size).  This is a metaflow-rich configuration: the per-layer a2a pair
+    are direct-gain metaflows in the step DAG (see core/comm_schedule).
+
+Over-capacity tokens are dropped (residual passes through) — standard
+capacity-factor semantics; tests cover the cf -> inf equivalence with a
+dense loop-over-experts reference.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+from repro.parallel import axes as ax
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], D, (E,), jnp.float32),
+        "w_gate": _stack_init(ks[1], E, D, F, dtype),
+        "w_up": _stack_init(ks[2], E, D, F, dtype),
+        "w_down": _stack_init(ks[3], E, F, D, dtype),
+    }
+
+
+def _stack_init(key, E, d_in, d_out, dtype):
+    keys = jax.random.split(key, E)
+    return jnp.stack([dense_init(keys[e], d_in, (d_out,), dtype)
+                      for e in range(E)])
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.experts_per_token * cfg.capacity_factor
+            / max(cfg.n_experts, 1))
+    return max(c, 1)
+
+
+def route_topk(router_logits: jax.Array, cfg: ModelConfig):
+    """[G, T, E] -> per-choice (expert_idx [G,T], prob [G,T]) lists.
+
+    Iterative top-k with renormalized softmax over the chosen experts
+    (Mixtral-style: softmax over top-k logits).
+    """
+    k = cfg.experts_per_token
+    top_vals, top_idx = jax.lax.top_k(router_logits, k)      # [G,T,k]
+    probs = jax.nn.softmax(top_vals, axis=-1)                # renormalized
+    return top_idx, probs.astype(router_logits.dtype)
+
+
+def moe_ffn(p, x, cfg: ModelConfig, ep: bool | None = None):
+    """x: [B, S, D] -> [B, S, D].  Groups = batch rows.
+
+    Sort-based dispatch: (token, choice) pairs are stably sorted by expert,
+    positions within each expert segment computed arithmetically, and tokens
+    gathered/scattered into an [E, C, D] capacity buffer.  Pure data
+    movement — no dispatch-einsum FLOPs, no [T, E, C] one-hot tensor.
+    """
+    if ep is None:
+        ep = cfg.moe_ep
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = capacity(cfg, S)
+    T = k * S
+    slots = E * C
+
+    logits = x.astype(jnp.float32) @ p["router"]              # [B,S,E]
+    top_idx, probs = route_topk(logits, cfg)                  # [B,S,k]
+
+    # Choice-major flattening: all top-1 picks claim capacity before any
+    # top-2 pick (GShard priority semantics).
+    e_flat = top_idx.transpose(0, 2, 1).reshape(B, T)         # [B,T]
+    p_flat = probs.transpose(0, 2, 1).reshape(B, T)
+    sort_ix = jnp.argsort(e_flat, axis=1, stable=True)        # [B,T]
+    e_sorted = jnp.take_along_axis(e_flat, sort_ix, axis=1)
+    p_sorted = jnp.take_along_axis(p_flat, sort_ix, axis=1)
+    tok_sorted = sort_ix % S                                  # source token
+
+    counts = jnp.sum(e_flat[:, :, None] == jnp.arange(E)[None, None, :],
+                     axis=1)                                  # [B,E]
+    seg_start = jnp.cumsum(counts, axis=1) - counts           # exclusive
+    pos_in_e = (jnp.arange(T)[None, :]
+                - jnp.take_along_axis(seg_start, e_sorted, axis=1))
+    keep = pos_in_e < C
+    dest = jnp.where(keep, e_sorted * C + pos_in_e, slots)    # drop row
+
+    x_src = jnp.take_along_axis(x, tok_sorted[..., None], axis=1)  # [B,T,D]
+    # vmap over the batch/group dim: the scatter lowers with explicit
+    # operand-batching dims, which GSPMD partitions along B — a plain
+    # .at[brow, dest] 2-D scatter makes the partitioner replicate the whole
+    # token buffer across the data axis (measured: 51 GB/device all-gathers
+    # per MoE layer at train_4k; see EXPERIMENTS.md §Perf iteration 1).
+    buf = jax.vmap(
+        lambda xb, db: jnp.zeros((slots + 1, D), x.dtype).at[db].set(xb)
+    )(x_src, dest)
+    buf = buf[:, :slots].reshape(B, E, C, D)
+
+    spec_e = ax.EP if ep else None
+    buf = ax.shard(buf, ax.BATCH, spec_e, None, None)
+    h = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    h2 = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(h) * h2
+    if not ep:
+        h = ax.shard(h, ax.BATCH, None, None, ax.TP)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_buf = ax.shard(out_buf, ax.BATCH, spec_e, None, None)
+
+    out_flat = jnp.pad(out_buf.reshape(B, slots, D),
+                       ((0, 0), (0, 1), (0, 0)))              # drop row = 0
+    w = (p_sorted * keep).astype(x.dtype)[..., None]
+    y = jax.vmap(                                             # batched gather
+        lambda ob, db, tb, wb: jnp.zeros((S, D), x.dtype)
+        .at[tb].add(ob[db] * wb)
+    )(out_flat, dest, tok_sorted, w)
+    return y.astype(x.dtype), logits
+
+
+def moe_ffn_dense_reference(p, x, cfg: ModelConfig):
+    """Oracle: loop over experts densely, weight by renormalized top-k
+    probs, no capacity dropping.  Matches moe_ffn when cf is generous."""
+    B, S, D = x.shape
+    E = cfg.n_experts
+    logits = x.astype(jnp.float32) @ p["router"]
+    top_idx, probs = route_topk(logits, cfg)
+    y = jnp.zeros_like(x)
+    for e in range(E):
+        h = jax.nn.silu(x @ p["w_gate"][e]) * (x @ p["w_up"][e])
+        o = h @ p["w_down"][e]
+        w = (probs * (top_idx == e)).sum(-1)                  # [B,S]
+        y = y + o * w[..., None].astype(x.dtype)
+    return y, logits
+
+
+def load_balancing_loss(logits: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Switch/GShard aux loss: E * sum_e f_e * p_e."""
+    E = cfg.n_experts
+    probs = jax.nn.softmax(logits, axis=-1)                   # [B,S,E]
+    top1 = jnp.argmax(logits, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+    pbar = jnp.mean(probs, axis=(0, 1))
+    return E * jnp.sum(f * pbar)

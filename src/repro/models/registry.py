@@ -1,0 +1,80 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg)`` returns a ``Model`` whose five functions cover every
+launcher path:
+
+  init(rng)                        -> params
+  loss(params, batch)              -> (scalar, metrics)    [train shapes]
+  prefill(params, batch, max_seq)  -> (logits, cache)      [prefill shapes]
+  decode(params, token, cache)     -> (logits, cache)      [decode shapes]
+  init_cache(batch, max_seq)       -> cache                [decode dry-run]
+
+``batch`` is a dict; which keys exist depends on the family (tokens/labels
+always for LMs; + ``prefix`` for VLM patch embeds; frames/tokens/labels for
+the enc-dec).  See launch/specs.py for the exact ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def get_model(cfg: ModelConfig, use_pallas: bool = False,
+              context_parallel: bool = False) -> Model:
+    if cfg.family == "encdec":
+        def init(rng):
+            return encdec.init_encdec(rng, cfg)
+
+        def loss(params, batch):
+            return encdec.loss_fn(params, batch, cfg, use_pallas)
+
+        def prefill_fn(params, batch, max_seq):
+            return encdec.prefill(params, batch["frames"], batch["tokens"],
+                                  cfg, max_seq)
+
+        def decode_fn(params, token, cache):
+            return encdec.decode_step(params, token, cache, cfg)
+
+        def init_cache(batch: int, max_seq: int):
+            raise NotImplementedError(
+                "enc-dec decode caches come from prefill (cross K/V needs "
+                "encoder output); the dry-run lowers decode against "
+                "eval_shape(prefill) instead.")
+
+        return Model(cfg, init, loss, prefill_fn, decode_fn, init_cache)
+
+    def init(rng):
+        return transformer.init_lm(rng, cfg)
+
+    def loss(params, batch):
+        return transformer.loss_fn(params, batch, cfg, use_pallas)
+
+    def prefill_fn(params, batch, max_seq):
+        return transformer.prefill(params, batch["tokens"], cfg, max_seq,
+                                   prefix=batch.get("prefix"))
+
+    def decode_fn(params, token, cache):
+        return transformer.decode_step(params, token, cache, cfg,
+                                       context_parallel=context_parallel)
+
+    def init_cache(batch: int, max_seq: int):
+        return transformer.init_decode_cache(cfg, batch, max_seq)
+
+    return Model(cfg, init, loss, prefill_fn, decode_fn, init_cache)

@@ -1,0 +1,28 @@
+"""Unit-scan unroll switch.
+
+The roofline pipeline compiles reduced-depth variants with the unit scan
+fully unrolled so ``cost_analysis()`` and HLO collective parsing see every
+layer (XLA does not weight while-loop bodies by trip count).  Only the
+*unit* scans unroll; inner scans (SSD chunk recurrence) always stay looped.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_unroll: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "scan_unroll", default=False)
+
+
+@contextlib.contextmanager
+def unroll_unit_scans():
+    token = _unroll.set(True)
+    try:
+        yield
+    finally:
+        _unroll.reset(token)
+
+
+def unit_scan_unroll() -> bool | int:
+    return True if _unroll.get() else 1

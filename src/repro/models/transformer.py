@@ -1,0 +1,301 @@
+"""Decoder-only LM backbone: dense / MoE / SSM / hybrid, scan-over-units.
+
+Layers are grouped into repeating *units* so heterogeneous stacks compile as
+one scanned body:
+
+  dense / moe (period 1):   unit = 1 layer                     (scan L)
+  moe period p:             unit = p layers (mlp ... moe)      (scan L/p)
+  ssm (mamba2):             unit = 1 mamba block, no FFN       (scan L)
+  hybrid (jamba):           unit = attn_layer_period layers — attention at
+                            position 0, mamba elsewhere; FFN alternates
+                            MLP/MoE by moe_layer_period         (scan L/8)
+
+VLM / audio prefixes: the caller passes precomputed prefix embeddings
+(stub modality frontend per the assignment) which are concatenated in front
+of the token embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models.common import dense_init, embed_init, rms_norm
+from repro.models.scan_config import unit_scan_unroll
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, load_balancing_loss, moe_ffn
+from repro.parallel import axes as ax
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def unit_layout(cfg: ModelConfig) -> list[dict[str, str | None]]:
+    if cfg.family == "hybrid":
+        unit_len = cfg.attn_layer_period
+    elif cfg.is_moe and cfg.moe_layer_period > 1:
+        unit_len = cfg.moe_layer_period
+    else:
+        unit_len = 1
+    if cfg.n_layers % unit_len:
+        raise ValueError(f"{cfg.name}: n_layers {cfg.n_layers} not divisible "
+                         f"by unit length {unit_len}")
+    layout = []
+    for i in range(unit_len):
+        mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+        if cfg.d_ff <= 0:
+            ffn = None
+        elif cfg.is_moe_layer(i):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        layout.append({"mixer": mixer, "ffn": ffn})
+    return layout
+
+
+def n_units(cfg: ModelConfig) -> int:
+    return cfg.n_layers // len(unit_layout(cfg))
+
+
+def _init_unit(key, cfg: ModelConfig, dtype) -> dict:
+    layout = unit_layout(cfg)
+    keys = jax.random.split(key, 2 * len(layout))
+    p: dict[str, Any] = {}
+    for j, sub in enumerate(layout):
+        sp: dict[str, Any] = {"mixer_norm": jnp.ones((cfg.d_model,), dtype)}
+        if sub["mixer"] == "attn":
+            sp["attn"] = attn.init_attn(keys[2 * j], cfg, dtype)
+        else:
+            sp["mamba"] = mb.init_mamba(keys[2 * j], cfg, dtype)
+        if sub["ffn"]:
+            sp["ffn_norm"] = jnp.ones((cfg.d_model,), dtype)
+            if sub["ffn"] == "moe":
+                sp["moe"] = init_moe(keys[2 * j + 1], cfg, dtype)
+            else:
+                sp["mlp"] = init_mlp(keys[2 * j + 1], cfg, dtype)
+        p[f"sub{j}"] = sp
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_units, k_head = jax.random.split(key, 3)
+    units = jax.vmap(lambda k: _init_unit(k, cfg, dtype))(
+        jax.random.split(k_units, n_units(cfg)))
+    params = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "units": units,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model,
+                                       (cfg.vocab_size,), dtype)
+    return params
+
+
+# ----------------------------------------------------------------- forward
+
+def _apply_unit_train(h, up, cfg: ModelConfig, use_pallas: bool):
+    layout = unit_layout(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    for j, sub in enumerate(layout):
+        sp = up[f"sub{j}"]
+        x = rms_norm(h, sp["mixer_norm"], cfg.norm_eps)
+        if sub["mixer"] == "attn":
+            y = attn.attend_train(sp["attn"], x, cfg, use_pallas=use_pallas)
+        else:
+            y, _ = mb.mamba_forward(sp["mamba"], x, cfg)
+        h = h + y
+        if sub["ffn"]:
+            x = rms_norm(h, sp["ffn_norm"], cfg.norm_eps)
+            if sub["ffn"] == "moe":
+                y, router_logits = moe_ffn(sp["moe"], x, cfg)
+                aux = aux + load_balancing_loss(router_logits, cfg)
+            else:
+                y = mlp(sp["mlp"], x, cfg)
+            h = h + y
+        h = ax.shard(h, ax.BATCH, None, None)
+    return h, aux
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, prefix=None):
+    h = params["embed"][tokens]
+    if prefix is not None:
+        h = jnp.concatenate([prefix.astype(h.dtype), h], axis=1)
+    return ax.shard(h, ax.BATCH, None, None)
+
+
+def lm_head(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w
+    return ax.shard(logits, ax.BATCH, None, ax.TP)
+
+
+def forward_train(params, tokens, cfg: ModelConfig, prefix=None,
+                  use_pallas: bool = False):
+    """tokens [B, S_text] (+ optional prefix embeds) -> (logits, aux_loss)."""
+    h = embed_tokens(params, tokens, cfg, prefix)
+
+    # Activation checkpointing: save only unit boundaries; the backward
+    # pass recomputes each unit body (standard large-model recipe).
+    @jax.checkpoint
+    def unit_fn(carry, up):
+        h, aux = carry
+        h, a = _apply_unit_train(h, up, cfg, use_pallas)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(unit_fn, (h, jnp.zeros((), jnp.float32)),
+                               params["units"],
+                               unroll=unit_scan_unroll())
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return lm_head(params, h, cfg), aux
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token-mean CE in fp32; labels < 0 are ignored."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    valid = (labels >= 0) if mask is None else mask & (labels >= 0)
+    nll = jnp.where(valid, nll, 0.0)
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, use_pallas: bool = False):
+    """batch: {'tokens': [B,St], 'labels': [B,St], optional 'prefix'}."""
+    prefix = batch.get("prefix")
+    logits, aux = forward_train(params, batch["tokens"], cfg, prefix,
+                                use_pallas)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]   # loss over text positions
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + AUX_LOSS_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------- serving
+
+class LayerCache(NamedTuple):
+    """Per-unit decode state (stacked over units by the scan)."""
+
+    kv: Any      # KVCache with [n_attn_sub, ...] leaves, or None
+    ssm: Any     # MambaState with [n_mamba_sub, ...] leaves, or None
+
+
+def _unit_kinds(cfg: ModelConfig) -> tuple[int, int]:
+    layout = unit_layout(cfg)
+    return (sum(1 for s in layout if s["mixer"] == "attn"),
+            sum(1 for s in layout if s["mixer"] == "mamba"))
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    n_attn, n_mamba = _unit_kinds(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    U = n_units(cfg)
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(
+            x, (U, n) + x.shape), tree)
+
+    kv = (stack(attn.init_cache(cfg, batch, max_seq, dtype), n_attn)
+          if n_attn else None)
+    ssm = (stack(mb.init_mamba_state(cfg, batch, dtype), n_mamba)
+           if n_mamba else None)
+    return LayerCache(kv=kv, ssm=ssm)
+
+
+def _apply_unit_prefill(h, up, cfg: ModelConfig, max_seq: int):
+    layout = unit_layout(cfg)
+    kvs, ssms = [], []
+    for j, sub in enumerate(layout):
+        sp = up[f"sub{j}"]
+        x = rms_norm(h, sp["mixer_norm"], cfg.norm_eps)
+        if sub["mixer"] == "attn":
+            y, kv = attn.attend_prefill(sp["attn"], x, cfg, max_seq)
+            kvs.append(kv)
+        else:
+            y, st = mb.mamba_forward(sp["mamba"], x, cfg)
+            ssms.append(st)
+        h = h + y
+        if sub["ffn"]:
+            x = rms_norm(h, sp["ffn_norm"], cfg.norm_eps)
+            if sub["ffn"] == "moe":
+                y, _ = moe_ffn(sp["moe"], x, cfg)
+            else:
+                y = mlp(sp["mlp"], x, cfg)
+            h = h + y
+    cache = LayerCache(
+        kv=jax.tree.map(lambda *xs: jnp.stack(xs), *kvs) if kvs else None,
+        ssm=jax.tree.map(lambda *xs: jnp.stack(xs), *ssms) if ssms else None)
+    return h, cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_seq: int, prefix=None):
+    """Full-context pass -> (last-position logits [B, V], stacked cache)."""
+    h = embed_tokens(params, tokens, cfg, prefix)
+
+    def unit_fn(h, up):
+        h, cache = _apply_unit_prefill(h, up, cfg, max_seq)
+        return h, cache
+
+    h, caches = jax.lax.scan(unit_fn, h, params["units"],
+                             unroll=unit_scan_unroll())
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, h[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+def _apply_unit_decode(h, up, cache: LayerCache, cfg: ModelConfig,
+                       context_parallel: bool):
+    layout = unit_layout(cfg)
+    ia = im = 0
+    kvs, ssms = [], []
+    for j, sub in enumerate(layout):
+        sp = up[f"sub{j}"]
+        x = rms_norm(h, sp["mixer_norm"], cfg.norm_eps)
+        if sub["mixer"] == "attn":
+            kv_j = jax.tree.map(lambda t: t[ia], cache.kv)
+            y, kv_j = attn.attend_decode(sp["attn"], x, kv_j, cfg,
+                                         context_parallel=context_parallel)
+            kvs.append(kv_j)
+            ia += 1
+        else:
+            st_j = jax.tree.map(lambda t: t[im], cache.ssm)
+            y, st_j = mb.mamba_decode(sp["mamba"], x, cfg, st_j)
+            ssms.append(st_j)
+            im += 1
+        h = h + y
+        if sub["ffn"]:
+            x = rms_norm(h, sp["ffn_norm"], cfg.norm_eps)
+            if sub["ffn"] == "moe":
+                y, _ = moe_ffn(sp["moe"], x, cfg)
+            else:
+                y = mlp(sp["mlp"], x, cfg)
+            h = h + y
+    new = LayerCache(
+        kv=jax.tree.map(lambda *xs: jnp.stack(xs), *kvs) if kvs else None,
+        ssm=jax.tree.map(lambda *xs: jnp.stack(xs), *ssms) if ssms else None)
+    return h, new
+
+
+def decode_step(params, token, cache: LayerCache, cfg: ModelConfig,
+                context_parallel: bool = False):
+    """token [B, 1] + cache -> (logits [B, V], new cache).  Cache leaves are
+    donated by the serving loop (in-place update on device)."""
+    h = embed_tokens(params, token, cfg)
+
+    def unit_fn(h, inp):
+        up, ucache = inp
+        h, new = _apply_unit_decode(h, up, ucache, cfg, context_parallel)
+        return h, new
+
+    h, new_caches = jax.lax.scan(unit_fn, h, (params["units"], cache),
+                                 unroll=unit_scan_unroll())
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, h, cfg)[:, 0]
+    return logits, new_caches

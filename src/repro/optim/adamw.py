@@ -1,0 +1,85 @@
+"""AdamW with global-norm clipping and cosine LR schedule, pure JAX.
+
+Moments are fp32 regardless of parameter dtype (bf16-safe); the update is
+applied in fp32 and cast back.  State mirrors the parameter tree, so the
+FSDP sharding rules apply verbatim to ``m`` and ``v``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array        # [] int32
+    m: Any                 # fp32 tree like params
+    v: Any                 # fp32 tree like params
+
+
+@dataclass(frozen=True)
+class AdamW:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def lr(self, step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = s / max(self.warmup_steps, 1)
+        prog = jnp.clip((s - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1), 0, 1)
+        cos = self.min_lr_ratio + (1 - self.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return self.peak_lr * jnp.where(s < self.warmup_steps, warm, cos)
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda t: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=zeros(params), v=zeros(params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> tuple[Any, AdamWState, dict]:
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        gnorm = global_norm(g32)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        step = state.step + 1
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        m = jax.tree.map(lambda mu, g: self.b1 * mu + (1 - self.b1) * g,
+                         state.m, g32)
+        v = jax.tree.map(lambda nu, g: self.b2 * nu + (1 - self.b2) * g * g,
+                         state.v, g32)
+
+        def upd(p, mu, nu):
+            mhat = mu / b1c
+            vhat = nu / b2c
+            step_ = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                step_ = step_ + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step_).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step=step, m=m, v=v), metrics
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x)) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

@@ -1,0 +1,1 @@
+"""Distribution layer: logical axes, sharding rules, ordered collectives."""

@@ -1,0 +1,112 @@
+"""Logical parallelism axes and activation-sharding helpers.
+
+Model code annotates activations with *logical* axes (BATCH / TP / CP / EP);
+this module resolves them onto whatever physical mesh is active:
+
+  single-pod  (data=16, model=16)          BATCH -> ("data",)
+  multi-pod   (pod=2, data=16, model=16)   BATCH -> ("pod", "data")
+
+Outside any mesh (CPU smoke tests) every helper is a no-op, so model code
+runs unmodified on one device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Logical activation axes.
+BATCH = "__batch__"    # data parallel (pod x data)
+TP = "__tp__"          # tensor parallel (model)
+CP = "__cp__"          # context parallel over sequence (data, decode-only)
+CPTP = "__cptp__"      # sequence over data x model (batch=1 long decode)
+EP = "__ep__"          # expert parallel (model)
+
+_mesh_axes: contextvars.ContextVar[tuple[str, ...] | None] = \
+    contextvars.ContextVar("mesh_axes", default=None)
+
+
+@contextlib.contextmanager
+def logical_mesh(axis_names: tuple[str, ...]):
+    """Declare the physical mesh axis names for activation sharding.
+
+    Use together with ``jax.sharding.use_mesh(mesh)`` (or explicit
+    in_shardings) when lowering; smoke tests skip both.
+    """
+    token = _mesh_axes.set(tuple(axis_names))
+    try:
+        yield
+    finally:
+        _mesh_axes.reset(token)
+
+
+def mesh_axes() -> tuple[str, ...] | None:
+    return _mesh_axes.get()
+
+
+def resolve(dim: str | None) -> str | tuple[str, ...] | None:
+    axes = _mesh_axes.get()
+    if axes is None or dim is None:
+        return None
+    if dim == BATCH:
+        return tuple(a for a in axes if a in ("pod", "data")) or None
+    if dim in (TP, EP):
+        return "model" if "model" in axes else None
+    if dim == CP:
+        return "data" if "data" in axes else None
+    if dim == CPTP:
+        got = tuple(a for a in axes if a in ("data", "model"))
+        return got or None
+    return dim   # literal mesh axis name
+
+
+def spec(*dims: str | None) -> P:
+    return P(*[resolve(d) for d in dims])
+
+
+def shard(x: jax.Array, *dims: str | None) -> jax.Array:
+    """with_sharding_constraint against the logical axes; no-op off-mesh.
+
+    Axes that do not divide the dimension are dropped (e.g. 8 KV heads on a
+    16-way model axis would otherwise force a pad/reshard bounce — the
+    'involuntary full rematerialization' GSPMD warning)."""
+    if _mesh_axes.get() is None:
+        return x
+    resolved = []
+    for d, size in zip([resolve(d) for d in dims], x.shape):
+        if d is None:
+            resolved.append(None)
+            continue
+        n = (_axis_size(d) if isinstance(d, str)
+             else int(np_prod([_axis_size(a) for a in d])))
+        resolved.append(d if n and size % n == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+def np_prod(xs):
+    out = 1
+    for v in xs:
+        out *= v
+    return out
+
+
+def batch_size_divisor() -> int:
+    """How many ways BATCH is split on the active mesh (1 off-mesh)."""
+    axes = _mesh_axes.get()
+    if not axes:
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        if a in axes:
+            n *= _axis_size(a)
+    return n
+
+
+def _axis_size(name: str) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.axis_sizes)).get(name, 1)

@@ -1,0 +1,103 @@
+"""Explicitly ordered collectives — MSA's schedule made real in HLO.
+
+XLA is free to reorder independent collectives; these helpers pin the
+emission/execution order by threading ``jax.lax.optimization_barrier``
+tokens through consecutive collectives: collective i+1's input depends on
+collective i's output, so no scheduler may hoist it earlier.  That is the
+TPU realization of MSA's bandwidth-assignment step (DESIGN.md §2): the
+priority list from ``core.comm_schedule.plan_step_comm`` becomes the static
+collective order of the training step.
+
+Used by the explicit-DP training mode (examples/train_lm.py) where unit
+gradients are first-class values (unit scan unrolled); the HLO order is
+asserted in tests/test_comm_schedule.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+_EPS = 1e-38  # smallest bf16 normal: the tie is numerically inert
+
+
+def _tie(tree: Any, token: jax.Array) -> tuple[Any, jax.Array]:
+    """Make every leaf of ``tree`` *value*-depend on ``token``.
+
+    ``optimization_barrier`` alone is insufficient: some XLA pipelines drop
+    it before the all-reduce combiner runs, which would merge/reorder the
+    chain (observed on the CPU backend).  Adding ``token * 1e-38`` creates
+    a dependency no pass may remove under strict float semantics, at the
+    cost of a sub-resolution perturbation (|token| is O(1) for clipped
+    grads, so the perturbation is ~1e-38 — below bf16/f32 resolution).
+    The barrier is kept as well for schedulers that honor it.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    tied = []
+    for x in leaves:
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            x = x + (token * _EPS).astype(x.dtype)
+        tied.append(x)
+    tied = jax.lax.optimization_barrier(tuple(tied) + (token,))
+    return jax.tree.unflatten(treedef, tied[:-1]), tied[-1]
+
+
+def ordered_psum(buckets: Sequence[Any], order: Sequence[int],
+                 axis_name: str) -> list[Any]:
+    """psum each bucket (a pytree) over ``axis_name`` in exactly ``order``.
+
+    Returns the synced buckets in their original positions.
+    """
+    if sorted(order) != list(range(len(buckets))):
+        raise ValueError(f"order {order} is not a permutation of buckets")
+    out: list[Any] = [None] * len(buckets)
+    token = jnp.zeros((), jnp.float32)
+    for rank, i in enumerate(order):
+        b = buckets[i]
+        if rank > 0:
+            b, token = _tie(b, token)
+        synced = jax.lax.psum(b, axis_name)
+        token = jax.tree.leaves(synced)[0].reshape(-1)[0].astype(jnp.float32)
+        out[i] = synced
+    return out
+
+
+def ordered_psum_scatter(buckets: Sequence[Any], order: Sequence[int],
+                         axis_name: str, tiled: bool = True) -> list[Any]:
+    """reduce-scatter variant (FSDP gradient sync): each bucket's leading
+    dim is scattered over ``axis_name`` in MSA priority order."""
+    out: list[Any] = [None] * len(buckets)
+    token = jnp.zeros((), jnp.float32)
+    for rank, i in enumerate(order):
+        b = buckets[i]
+        if rank > 0:
+            b, token = _tie(b, token)
+        synced = jax.tree.map(
+            lambda x: jax.lax.psum_scatter(x, axis_name, tiled=tiled), b)
+        token = jax.tree.leaves(synced)[0].reshape(-1)[0].astype(jnp.float32)
+        out[i] = synced
+    return out
+
+
+def unit_grad_buckets(grads: Any) -> list[Any]:
+    """Split a grads tree whose ``units`` leaves are stacked [U, ...] into
+    U per-unit buckets (the metaflows of the step DAG); non-unit leaves
+    (embeddings, head, final norm) form one extra bucket at the end."""
+    units = grads["units"]
+    U = jax.tree.leaves(units)[0].shape[0]
+    buckets = [jax.tree.map(lambda x, u=u: x[u], units) for u in range(U)]
+    rest = {k: v for k, v in grads.items() if k != "units"}
+    buckets.append(rest)
+    return buckets
+
+
+def merge_unit_buckets(buckets: list[Any], template: Any) -> Any:
+    """Inverse of unit_grad_buckets."""
+    U = len(buckets) - 1
+    units = jax.tree.map(lambda *xs: jnp.stack(xs), *buckets[:U])
+    out = dict(buckets[U])
+    out["units"] = units
+    return out

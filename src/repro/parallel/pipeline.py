@@ -1,0 +1,97 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+Stages hold consecutive layer blocks (stage-sharded leading dim);
+microbatches stream through the ring with ``jax.lax.ppermute`` inside a
+``shard_map``.  The schedule is the classic GPipe loop: ``M + S - 1``
+ticks, stage ``s`` processes microbatch ``t - s`` at tick ``t`` (the first
+and last ``S-1`` ticks are the pipeline bubble).
+
+The production dry-run uses FSDP across pods (DESIGN.md §4) — pipeline
+stages are the alternative mapping of the ``pod`` axis for
+interconnect-poor topologies; this module provides the executable,
+tested schedule (tests/test_pipeline.py: pipeline output == sequential
+layer application, any M >= S).
+
+In metaflow terms each ppermute hop is a single-flow metaflow consumed by
+the next stage's compute — the DAG is a total order, which is exactly the
+topology where the paper's DAG-aware scheduling wins most (Fig. 3b).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                   stage_params: Any, x: jax.Array, *, axis_name: str,
+                   n_stages: int) -> jax.Array:
+    """Run inside shard_map: stage-local params, microbatched input.
+
+    Args:
+      stage_fn: (params_for_one_stage, act [B, ...]) -> act [B, ...]
+      stage_params: this stage's params (leading stage dim already split
+        by shard_map, i.e. locally [1, ...] — squeezed here)
+      x: [M, B, ...] microbatches (replicated across stages; only stage 0
+        injects them)
+      axis_name: the pipeline mesh axis
+      n_stages: static stage count (== mesh axis size)
+
+    Returns [M, B, ...] outputs (valid on the last stage; callers usually
+    psum-select or read the last stage's shard).
+    """
+    M = x.shape[0]
+    stage = jax.lax.axis_index(axis_name)
+    local = jax.tree.map(lambda p: p[0], stage_params)
+    S = n_stages
+    ticks = M + S - 1
+
+    def tick(carry, t):
+        buf, out = carry
+        # Stage 0 injects microbatch t (when in range).
+        inject = jnp.where(t < M, t, M - 1)
+        x_in = x[inject]
+        buf = jnp.where(stage == 0, x_in, buf)
+        y = stage_fn(local, buf)
+        # Collect on the last stage: tick t emits microbatch t - (S-1).
+        m_out = t - (S - 1)
+        valid = (stage == S - 1) & (m_out >= 0)
+        out = jax.lax.cond(
+            valid,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, jnp.maximum(m_out, 0), 0),
+            lambda o: o, out)
+        # Shift activations forward around the ring.
+        buf = jax.lax.ppermute(y, axis_name,
+                               perm=[(i, (i + 1) % S) for i in range(S)])
+        return (buf, out), None
+
+    buf0 = jnp.zeros_like(x[0])
+    out0 = jnp.zeros_like(x)
+    (_, out), _ = jax.lax.scan(tick, (buf0, out0), jnp.arange(ticks))
+    # Broadcast the last stage's result to every stage (so out_specs can
+    # be replicated): zero elsewhere + psum.
+    out = jnp.where(stage == S - 1, out, jnp.zeros_like(out))
+    return jax.lax.psum(out, axis_name)
+
+
+def make_pipelined_fn(stage_fn: Callable, mesh, axis_name: str = "stage"):
+    """Wrap ``pipeline_apply`` in shard_map over ``axis_name``.
+
+    Returned callable: (stacked_params [S, ...], x [M, B, ...]) -> [M, B, ...].
+    """
+    from jax.sharding import PartitionSpec as P
+
+    n_stages = dict(zip(mesh.axis_names, mesh.axis_sizes))[axis_name]
+
+    def inner(params, x):
+        return pipeline_apply(stage_fn, params, x, axis_name=axis_name,
+                              n_stages=n_stages)
+
+    return jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(axis_name), P()),
+        out_specs=P(),
+        check_vma=False)

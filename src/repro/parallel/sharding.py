@@ -1,0 +1,205 @@
+"""Parameter sharding rules: FSDP x TP over the production mesh.
+
+Design (DESIGN.md §4):
+  * FSDP (ZeRO-3) shards every matrix's *contraction-side* dimension over
+    the intra-pod ``data`` axis; XLA's SPMD partitioner inserts the
+    per-layer all-gathers (fwd/bwd) and reduce-scatters (grad) inside the
+    scan loop.
+  * TP shards head / hidden / vocab output dimensions over ``model``.
+  * The ``pod`` axis is pure DP: parameters replicated across pods, batch
+    and gradient all-reduce span it (DCN-friendly).
+  * Optimizer moments mirror parameter specs (they are tree-mapped).
+
+Rules are name-suffix driven and right-aligned: scan-stacked leading unit /
+layer / expert dims stay unsharded unless a rule names them.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+# (name match, spec for the trailing dims). Earlier rules win.
+_RULES: list[tuple[tuple[str, ...], tuple[Any, ...]]] = [
+    (("embed",), (TP_AXIS, FSDP_AXIS)),            # [V, D]
+    (("lm_head",), (FSDP_AXIS, TP_AXIS)),          # [D, V]
+    (("wq", "wk", "wv"), (FSDP_AXIS, TP_AXIS)),    # [D, H*hd]
+    (("wo",), (TP_AXIS, FSDP_AXIS)),               # [H*hd, D]
+    (("w_gate", "w_up"), (FSDP_AXIS, TP_AXIS)),    # [.., D, F]
+    (("w_down",), (TP_AXIS, FSDP_AXIS)),           # [.., F, D]
+    (("router",), (FSDP_AXIS, None)),              # [D, E]
+    (("in_proj",), (FSDP_AXIS, None)),             # [D, ch] (mamba)
+    (("out_proj",), (None, FSDP_AXIS)),            # [d_in, D] (mamba)
+    (("bq", "bk", "bv"), (TP_AXIS,)),              # biases follow out dim
+]
+
+_REPLICATED = ("conv_w", "conv_b", "A_log", "D", "dt_bias", "norm_scale",
+               "mixer_norm", "ffn_norm", "final_norm", "enc_norm",
+               "attn_norm", "mlp_norm", "self_norm", "cross_norm")
+
+
+import contextvars
+
+_moe_ep: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "moe_ep_rules", default=False)
+
+# Expert-parallel weight layout: experts over `model`, D over `data` (FSDP).
+_EP_RULES: dict[str, tuple] = {
+    "w_gate": (TP_AXIS, FSDP_AXIS, None),   # [E@model, D@data, F]
+    "w_up": (TP_AXIS, FSDP_AXIS, None),
+    "w_down": (TP_AXIS, None, FSDP_AXIS),   # [E@model, F, D@data]
+}
+
+
+def use_moe_ep(on: bool = True):
+    """Context manager: switch MoE weight rules to expert-parallel."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def _cm():
+        tok = _moe_ep.set(on)
+        try:
+            yield
+        finally:
+            _moe_ep.reset(tok)
+    return _cm()
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def spec_for(path, leaf) -> P:
+    name = _leaf_name(path)
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if name in _REPLICATED:
+        return P()
+    is_moe_leaf = any(str(getattr(e, "key", "")) == "moe" for e in path)
+    if _moe_ep.get() and is_moe_leaf and name in _EP_RULES:
+        tail = _EP_RULES[name]
+        if ndim < len(tail):
+            return P()
+        return P(*((None,) * (ndim - len(tail))), *tail)
+    for names, tail in _RULES:
+        if name in names:
+            if ndim < len(tail):
+                return P()
+            lead = (None,) * (ndim - len(tail))
+            return P(*lead, *tail)
+    return P()   # default: replicated (scalars, counters, ...)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes.get(a, 1)
+        return n
+    return sizes.get(axis, 1)
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes whose mesh size does not divide the dim (e.g. vocab 51865
+    on a 16-way model axis) — replicate that dim instead."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, axis in zip(shape, dims):
+        if axis is None:
+            out.append(None)
+        elif d % _axis_size(mesh, axis):
+            out.append(None)
+        else:
+            out.append(axis)
+    return P(*out)
+
+
+def param_specs(params, mesh: Mesh | None = None) -> Any:
+    """Tree of PartitionSpec matching ``params`` (works on SDS trees)."""
+    def one(path, leaf):
+        s = spec_for(path, leaf)
+        return sanitize(s, leaf.shape, mesh) if mesh is not None else s
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def serving_param_specs(params, mesh: Mesh | None = None) -> Any:
+    """Weight-stationary serving layout (§Perf iteration 6): weights are
+    sharded over ``model`` only and replicated across ``data`` — decode
+    steps then perform zero per-step FSDP weight all-gathers (training
+    wants ZeRO-3; serving wants TP-resident weights)."""
+    def one(path, leaf):
+        s = spec_for(path, leaf)
+        s = P(*[None if d == FSDP_AXIS else d for d in s])
+        return sanitize(s, leaf.shape, mesh) if mesh is not None else s
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def state_specs(state, mesh: Mesh | None = None) -> Any:
+    """TrainState: params/m/v share specs; scalars replicated."""
+    def one(path, leaf):
+        s = spec_for(path, leaf)
+        return sanitize(s, leaf.shape, mesh) if mesh is not None else s
+    return jax.tree_util.tree_map_with_path(one, state)
+
+
+def state_shardings(mesh: Mesh, state) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        state_specs(state, mesh))
+
+
+def batch_specs(batch, mesh: Mesh) -> Any:
+    """Inputs: batch dim over (pod?, data); replicated if not divisible."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+
+    def one(x):
+        nd = x.ndim
+        return sanitize(P(dp, *([None] * (nd - 1))), x.shape, mesh)
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache, mesh: Mesh, context_parallel: bool = False) -> Any:
+    """Decode caches: batch over DP; with CP, the KV sequence axis over
+    ``data`` instead (batch=1 long-context decode)."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+
+    def one(path, x):
+        name = _leaf_name(path)
+        nd = x.ndim
+        if name == "length" or nd < 2:
+            return P()
+        if context_parallel and name in ("k", "v") and nd >= 3:
+            # [..., B, C, KV, hd] -> sequence over data x model (batch=1)
+            spec = [None] * nd
+            spec[-3] = tuple(a for a in mesh.axis_names
+                             if a in ("data", "model")) or None
+            return sanitize(P(*spec), x.shape, mesh)
+        # Default: batch over DP + KV sequence over model (the KV cache is
+        # the decode memory bottleneck; §Perf iteration 3).
+        spec = [None] * nd
+        if name in ("k", "v") and nd >= 4:          # [..., B, C, KV, hd]
+            spec[-4] = dp
+            spec[-3] = "model"
+        elif name == "ssm" and nd >= 4:             # [..., B, H, P, N]
+            spec[-4] = dp
+        elif name == "conv" and nd >= 3:            # [..., B, K-1, ch]
+            spec[-3] = dp
+        return sanitize(P(*spec), x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,30 @@
+"""Train state pytree."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    step: jax.Array       # [] int32
+    params: Any
+    opt: AdamWState
+    rng: jax.Array        # PRNG key
+
+
+def init_state(model, optimizer: AdamW, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=optimizer.init(params),
+                      rng=jax.random.fold_in(rng, 1))
+
+
+def state_struct(model, optimizer: AdamW) -> TrainState:
+    """ShapeDtypeStruct tree of the state — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_state(model, optimizer,
+                                             jax.random.PRNGKey(0)))

@@ -1,0 +1,84 @@
+"""Train / serve step factories.
+
+``make_train_step`` closes over the model and optimizer and returns the
+jittable ``(state, batch) -> (state, metrics)`` function.  Gradient
+synchronization is implicit (GSPMD reduce-scatter/all-reduce from the
+sharding specs); ``grad_transform`` hooks in the explicit paths:
+MSA-ordered reduce-scatter (parallel/collectives.py) and int8 compression
+(parallel/compression.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.optim.adamw import AdamW
+from repro.train.state import TrainState
+
+
+def make_train_step(model: Model, optimizer: AdamW,
+                    grad_transform: Callable | None = None,
+                    microbatches: int = 1):
+    """(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` splits the global batch and accumulates gradients
+    in fp32 over a ``lax.scan`` — the standard fit-a-big-batch recipe (the
+    optimizer update and gradient collectives then amortize once per step).
+    """
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        return loss, parts, grads
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            loss, parts, grads = grads_of(state.params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, microbatch):
+                g_acc, l_acc = carry
+                loss, parts, g = grads_of(state.params, microbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), parts
+
+            (g32, loss_sum), parts = jax.lax.scan(
+                acc, (zero, jnp.zeros((), jnp.float32)), mb)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g, p: (g * inv).astype(p.dtype),
+                                 g32, state.params)
+            loss = loss_sum * inv
+            parts = jax.tree.map(lambda x: x.mean(), parts)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt, om = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, **parts, **om}
+        new = TrainState(step=state.step + 1, params=params, opt=opt,
+                         rng=jax.random.fold_in(state.rng, 1))
+        return new, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_seq: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, cache):
+        return model.decode(params, token, cache)
+    return decode_step

@@ -1,0 +1,130 @@
+"""Dry-run machinery at CI scale: the same lower+compile+analyze flow on an
+8-device host mesh with smoke configs, in a subprocess (device count must
+be set before jax init; production cells use 512 devices via dryrun.py)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.specs import decode_specs, train_specs
+    from repro.models import get_model
+    from repro.models.scan_config import unroll_unit_scans
+    from repro.optim.adamw import AdamW
+    from repro.parallel import axes as ax
+    from repro.parallel.sharding import batch_specs, cache_specs, \\
+        param_specs, state_specs
+    from repro.roofline.analysis import total_collective_bytes
+    from repro.train.state import state_struct
+    from repro.train.step import make_train_step
+
+    mesh = make_test_mesh(4, 2)
+    out = {}
+    for arch in ("qwen2-7b", "mixtral-8x22b", "mamba2-370m"):
+        cfg = get_config(arch).smoke(dtype="bfloat16")
+        model = get_model(cfg)
+        shape = ShapeConfig("t", seq_len=64, global_batch=8, kind="train")
+        opt = AdamW()
+        step = make_train_step(model, opt)
+        state = state_struct(model, opt)
+        batch = train_specs(cfg, shape)
+        with jax.set_mesh(mesh), ax.logical_mesh(mesh.axis_names):
+            fn = jax.jit(step,
+                         in_shardings=(state_specs(state, mesh),
+                                       batch_specs(batch, mesh)),
+                         donate_argnums=0)
+            compiled = fn.lower(state, batch).compile()
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        out[arch] = {
+            "flops": ca.get("flops", 0.0),
+            "coll": total_collective_bytes(compiled.as_text()),
+            "temp": mem.temp_size_in_bytes,
+        }
+
+    # decode path on the small mesh too
+    cfg = get_config("qwen2-7b").smoke(dtype="bfloat16")
+    model = get_model(cfg)
+    shape = ShapeConfig("d", seq_len=128, global_batch=8, kind="decode")
+    token, cache = decode_specs(cfg, shape, model)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    with jax.set_mesh(mesh), ax.logical_mesh(mesh.axis_names):
+        fn = jax.jit(model.decode,
+                     in_shardings=(param_specs(params, mesh),
+                                   batch_specs(token, mesh),
+                                   cache_specs(cache, mesh)),
+                     donate_argnums=2)
+        compiled = fn.lower(params, token, cache).compile()
+    out["decode"] = {"ok": True,
+                     "coll": total_collective_bytes(compiled.as_text())}
+
+    # extrapolation validation: marginal method == full unroll, same model
+    from repro.roofline.analysis import extrapolate
+    import dataclasses
+    cfg8 = get_config("qwen2-7b").smoke(n_layers=8, dtype="bfloat16")
+    def flops_at(n_layers, unroll):
+        c = dataclasses.replace(cfg8, n_layers=n_layers)
+        m = get_model(c)
+        st = state_struct(m, AdamW())
+        b = train_specs(c, ShapeConfig("t", 64, 8, "train"))
+        ctx = unroll_unit_scans() if unroll else None
+        import contextlib
+        with jax.set_mesh(mesh), ax.logical_mesh(mesh.axis_names), \\
+                (ctx or contextlib.nullcontext()):
+            fn = jax.jit(make_train_step(m, AdamW()),
+                         in_shardings=(state_specs(st, mesh),
+                                       batch_specs(b, mesh)))
+            return fn.lower(st, b).compile().cost_analysis().get("flops")
+    f2 = flops_at(2, True)
+    f4 = flops_at(4, True)
+    f8_pred = extrapolate(2, f2, 4, f4, 8)
+    f8_true = flops_at(8, True)
+    out["extrapolation"] = {"pred": f8_pred, "true": f8_true,
+                            "rel_err": abs(f8_pred - f8_true) / f8_true}
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_train_cells_compile_on_test_mesh(results):
+    for arch in ("qwen2-7b", "mixtral-8x22b", "mamba2-370m"):
+        assert results[arch]["flops"] > 0
+        assert results[arch]["coll"] > 0      # sharded -> collectives exist
+
+
+def test_decode_cell_compiles_on_test_mesh(results):
+    assert results["decode"]["ok"]
+
+
+def test_depth_extrapolation_matches_full_unroll(results):
+    """The §Roofline marginal-depth method vs a fully-unrolled compile of
+    the same model: within ~6% at smoke scale (XLA fusion boundaries shift
+    at toy layer sizes; at production dims the per-unit marginal dominates
+    and the method is tighter — EXPERIMENTS.md §Dry-run methodology)."""
+    assert results["extrapolation"]["rel_err"] < 0.08, results["extrapolation"]

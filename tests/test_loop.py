@@ -1,0 +1,100 @@
+"""Fault-tolerant loop: resume, preemption, straggler detection, and the
+quickstart-scale training convergence check."""
+
+import os
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_pipeline
+from repro.models import get_model
+from repro.optim.adamw import AdamW
+from repro.train import loop as loop_lib
+from repro.train.state import init_state
+from repro.train.step import make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-4b").smoke(vocab_size=64)
+    model = get_model(cfg)
+    opt = AdamW(peak_lr=1e-2, warmup_steps=5, total_steps=60)
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    pipe = make_pipeline(cfg, shape)
+    step = jax.jit(make_train_step(model, opt))
+    init = lambda: init_state(model, opt, jax.random.PRNGKey(0))
+    return model, opt, step, init, pipe
+
+
+def test_loss_decreases(setup, tmp_path):
+    _, _, step, init, pipe = setup
+    cfg = loop_lib.LoopConfig(total_steps=30, ckpt_every=100,
+                              ckpt_dir=str(tmp_path / "c1"))
+    rep = loop_lib.run(step, init, pipe.batch_at, cfg)
+    assert rep.steps_run == 30
+    first = np.mean(rep.losses[:5])
+    last = np.mean(rep.losses[-5:])
+    assert last < first * 0.9, f"no learning: {first} -> {last}"
+
+
+def test_resume_from_checkpoint(setup, tmp_path):
+    _, _, step, init, pipe = setup
+    d = str(tmp_path / "c2")
+    cfg = loop_lib.LoopConfig(total_steps=10, ckpt_every=5, ckpt_dir=d)
+    rep1 = loop_lib.run(step, init, pipe.batch_at, cfg)
+    assert rep1.final_step == 10
+
+    cfg2 = loop_lib.LoopConfig(total_steps=15, ckpt_every=5, ckpt_dir=d)
+    rep2 = loop_lib.run(step, init, pipe.batch_at, cfg2)
+    assert rep2.resumed_from == 10
+    assert rep2.steps_run == 5          # only the remaining steps
+    assert rep2.final_step == 15
+
+
+def test_preemption_checkpoint(setup, tmp_path):
+    """SIGTERM mid-run -> loop checkpoints and exits cleanly; a rerun
+    resumes from the preemption point."""
+    _, _, step, init, pipe = setup
+    d = str(tmp_path / "c3")
+
+    calls = {"n": 0}
+    orig = pipe.batch_at
+
+    def batch_with_preemption(s):
+        calls["n"] += 1
+        if calls["n"] == 4:
+            os.kill(os.getpid(), signal.SIGTERM)
+        return orig(s)
+
+    cfg = loop_lib.LoopConfig(total_steps=50, ckpt_every=1000, ckpt_dir=d)
+    rep = loop_lib.run(step, init, batch_with_preemption, cfg)
+    assert rep.preempted
+    assert rep.final_step < 50
+    from repro.checkpoint.ckpt import latest_step
+    assert latest_step(d) == rep.final_step
+
+    rep2 = loop_lib.run(step, init, orig, loop_lib.LoopConfig(
+        total_steps=rep.final_step + 3, ckpt_every=1000, ckpt_dir=d))
+    assert rep2.resumed_from == rep.final_step
+    assert rep2.steps_run == 3
+
+
+def test_straggler_detection(setup, tmp_path):
+    _, _, step, init, pipe = setup
+
+    import time as _t
+    orig = pipe.batch_at
+
+    def slow_batch(s):
+        if s == 7:
+            _t.sleep(1.0)       # injected straggler
+        return orig(s)
+
+    cfg = loop_lib.LoopConfig(total_steps=12, ckpt_every=1000,
+                              ckpt_dir=str(tmp_path / "c4"))
+    rep = loop_lib.run(step, init, slow_batch, cfg)
+    assert 7 in rep.straggler_steps

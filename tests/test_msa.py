@@ -1,0 +1,133 @@
+"""MSA unit tests: exact reproduction of the paper's worked examples."""
+
+import pytest
+
+from repro.core import (FairScheduler, MSAScheduler, VarysScheduler,
+                        figure1_jobs, figure2_job, metaflow_priorities,
+                        simulate)
+from repro.core.metaflow import JobDAG
+
+
+class TestFigure1:
+    """Paper Figure 1: the motivating example, exact arithmetic.
+
+    Varys (CCT-optimal, Fig 1c): CCTs (3,4) avg 3.5; JCTs (6,10) avg 8.
+    MSA   (DAG-aware,   Fig 1d): CCTs (4,4) avg 4.0; JCTs (7,7)  avg 7.
+    """
+
+    def test_varys_matches_fig1c(self):
+        res = simulate(figure1_jobs(), VarysScheduler(), n_ports=3)
+        assert res.cct["J1"] == pytest.approx(3.0)
+        assert res.cct["J2"] == pytest.approx(4.0)
+        assert res.avg_cct == pytest.approx(3.5)
+        assert res.jct["J1"] == pytest.approx(6.0)
+        assert res.jct["J2"] == pytest.approx(10.0)
+        assert res.avg_jct == pytest.approx(8.0)
+
+    @pytest.mark.parametrize("gain_mode", ["unlockable", "descendants"])
+    def test_msa_matches_fig1d(self, gain_mode):
+        res = simulate(figure1_jobs(), MSAScheduler(gain_mode=gain_mode),
+                       n_ports=3)
+        assert res.cct["J1"] == pytest.approx(4.0)
+        assert res.cct["J2"] == pytest.approx(4.0)
+        assert res.avg_cct == pytest.approx(4.0)
+        assert res.jct["J1"] == pytest.approx(7.0)
+        assert res.jct["J2"] == pytest.approx(7.0)
+        assert res.avg_jct == pytest.approx(7.0)
+
+    def test_msa_beats_varys_on_jct_but_not_cct(self):
+        msa = simulate(figure1_jobs(), MSAScheduler(), n_ports=3)
+        varys = simulate(figure1_jobs(), VarysScheduler(), n_ports=3)
+        assert msa.avg_jct < varys.avg_jct      # the paper's point
+        assert msa.avg_cct > varys.avg_cct      # and the price in CCT
+
+    def test_msa_schedule_detail(self):
+        """The Fig-1d schedule itself: MF_B on [0,1), MF_A and MF_C on [1,4),
+        c_b on [1,4), c_c on [4,7)."""
+        res = simulate(figure1_jobs(), MSAScheduler(), n_ports=3)
+        assert res.mf_finish[("J2", "MF_B")] == pytest.approx(1.0)
+        assert res.mf_finish[("J1", "MF_A")] == pytest.approx(4.0)
+        assert res.mf_finish[("J2", "MF_C")] == pytest.approx(4.0)
+        assert res.task_finish[("J2", "c_b")] == pytest.approx(4.0)
+        assert res.task_finish[("J2", "c_c")] == pytest.approx(7.0)
+
+
+class TestFigure2Gains:
+    """Paper Figure 2 / Section 2: gain classification and attributes."""
+
+    def test_priorities_classification(self):
+        job = figure2_job()
+        active = [(job, mf) for mf in job.metaflows.values()]
+        prios = {p.name: p for p in metaflow_priorities([job], active)}
+        # MF1, MF2 can invoke computation independently -> direct.
+        assert prios["MF1"].direct and prios["MF2"].direct
+        # MF3, MF4 must wait for other metaflows -> indirect.
+        assert not prios["MF3"].direct and not prios["MF4"].direct
+        # attr(MF3) = reSize(MF1)+reSize(MF3); attr(MF4) = sum of all four.
+        assert prios["MF3"].attribute == pytest.approx(4.0 + 4.0)
+        assert prios["MF4"].attribute == pytest.approx(4.0 + 2.0 + 4.0 + 2.0)
+        # Direct gains: load/reSize.
+        assert prios["MF1"].gain == pytest.approx(4.0 / 4.0)
+        assert prios["MF2"].gain == pytest.approx(2.0 / 2.0)
+
+    def test_descendants_mode_matches_paper_prose(self):
+        """Under gain_mode='descendants' MF2's numerator is load_c2+load_c4
+        (the literal Fig-2 arithmetic)."""
+        job = figure2_job()
+        active = [(job, mf) for mf in job.metaflows.values()]
+        prios = {p.name: p
+                 for p in metaflow_priorities([job], active,
+                                              gain_mode="descendants")}
+        assert prios["MF2"].gain == pytest.approx((2.0 + 2.0) / 2.0)
+        # MF1's descendants include c3 and c4 in this mode.
+        assert prios["MF1"].gain == pytest.approx((4.0 + 4.0 + 2.0) / 4.0)
+
+    def test_ordering_direct_before_indirect(self):
+        job = figure2_job()
+        active = [(job, mf) for mf in job.metaflows.values()]
+        ordered = [p.name for p in metaflow_priorities([job], active)]
+        assert set(ordered[:2]) == {"MF1", "MF2"}
+        assert ordered[2] == "MF3"   # smaller attribute first
+        assert ordered[3] == "MF4"
+
+
+class TestGainDynamics:
+    def test_indirect_becomes_direct_when_blocker_finishes(self):
+        """Once MF_B finishes in Fig-1's J2, MF_C's only unfinished metaflow
+        requirement is itself -> it turns direct (compute deps don't block
+        directness: they are guaranteed to complete)."""
+        jobs = figure1_jobs()
+        j2 = jobs[1]
+        for f in j2.metaflows["MF_B"].flows:
+            f.remaining = 0.0
+        active = [(j2, j2.metaflows["MF_C"])]
+        prios = metaflow_priorities([j2], active)
+        assert prios[0].direct
+        assert prios[0].gain == pytest.approx(3.0 / 3.0)
+
+    def test_zero_remaining_guard(self):
+        job = JobDAG(name="z")
+        job.add_metaflow("m", flows=[(0, 1, 1e-6)])
+        job.add_task("c", load=5.0, deps=["m"])
+        active = [(job, job.metaflows["m"])]
+        prios = metaflow_priorities([job], active)
+        assert prios[0].direct and prios[0].gain > 0
+
+
+class TestHardBarrier:
+    def test_msa_equals_varys_under_barrier(self):
+        """Paper: 'in presence of the hard barrier, MSA is equivalent to
+        Varys and achieves the same JCT'."""
+        def barrier_job():
+            j = JobDAG(name="b")
+            j.add_metaflow("MF0", flows=[(0, 2, 2.0)])
+            j.add_metaflow("MF1", flows=[(1, 2, 4.0)])
+            j.add_task("c0", load=1.0, deps=["MF0", "MF1"])
+            j.add_task("c1", load=2.0, deps=["MF0", "MF1"])
+            return j
+
+        msa = simulate([barrier_job()], MSAScheduler(), n_ports=3)
+        varys = simulate([barrier_job()], VarysScheduler(), n_ports=3)
+        assert msa.avg_jct == pytest.approx(varys.avg_jct)
+        # Both bottlenecked on port-2 ingress: 6 units, then 2 compute.
+        assert msa.avg_jct == pytest.approx(8.0)

@@ -1,0 +1,52 @@
+"""GPipe pipeline == sequential layer application (4-stage host mesh)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp
+    from repro.parallel.pipeline import make_pipelined_fn
+
+    S, M, B, D = 4, 6, 2, 8
+    mesh = jax.make_mesh((S,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    key = jax.random.PRNGKey(0)
+    kw, kx = jax.random.split(key)
+    Ws = jax.random.normal(kw, (S, D, D)) / jnp.sqrt(D)
+    x = jax.random.normal(kx, (M, B, D))
+
+    def stage_fn(w, h):
+        return jax.nn.relu(h @ w)
+
+    piped = jax.jit(make_pipelined_fn(stage_fn, mesh))
+    got = piped(Ws, x)
+
+    want = x
+    for s in range(S):
+        want = jax.nn.relu(want @ Ws[s])
+
+    err = float(jnp.abs(got - want).max())
+    print("RESULT:" + json.dumps({"err": err}))
+""")
+
+
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")][0]
+    res = json.loads(line[len("RESULT:"):])
+    assert res["err"] < 1e-5, f"pipeline diverges: max err {res['err']}"
