@@ -5,16 +5,24 @@ fails (exit 1) if any bench's check() finds a regression.
   fig1_motivation  — paper Fig 1 exact arithmetic (MSA 7 vs Varys 8)
   fig3_topologies  — paper Fig 3b topology sweep, two workload regimes
   comm_overlap     — MSA on our own training-step DAG (all archs)
-  sched_micro      — scheduler decision latency
+  sched_micro      — scheduler decision latency + decision caching
   roofline_table   — §Roofline summary from dry-run artifacts
 
-Usage: python -m benchmarks.run [--quick] [--only NAME]
+Scheduling policies resolve through the ``repro.core.sched`` registry;
+``--policy NAME`` (repeatable) overrides the policy set for the benches
+that take one, so a newly ``@register``-ed policy is benchmarkable with no
+code edits here.
+
+Usage: python -m benchmarks.run [--quick] [--only NAME] [--policy NAME ...]
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
+
+from repro.core.sched import available_policies
 
 from benchmarks import (comm_overlap, fig1_motivation, fig3_topologies,
                         roofline_table, sched_micro)
@@ -32,6 +40,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", choices=sorted(BENCHES))
+    ap.add_argument("--policy", action="append", default=None,
+                    choices=available_policies(), metavar="NAME",
+                    help="scheduling policy to benchmark (repeatable; "
+                         f"available: {', '.join(available_policies())})")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -39,7 +51,10 @@ def main() -> None:
     for name, mod in BENCHES.items():
         if args.only and name != args.only:
             continue
-        rows = mod.run(quick=args.quick)
+        kwargs = {"quick": args.quick}
+        if args.policy and "policies" in inspect.signature(mod.run).parameters:
+            kwargs["policies"] = args.policy
+        rows = mod.run(**kwargs)
         for r in rows:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
         errs = mod.check(rows)

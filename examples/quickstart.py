@@ -4,14 +4,13 @@
 
 Walks Figure 1 (MSA avg JCT 7 vs Varys 8) with the full event timeline and
 Figure 2 (gain classification), then schedules a synthesized Facebook-like
-job under all four policies.
+job under every policy in the ``repro.core.sched`` registry.
 """
 
 import random
 
-from repro.core import (FairScheduler, MSAScheduler, VarysScheduler,
-                        figure1_jobs, figure2_job, metaflow_priorities,
-                        simulate)
+from repro.core import (available_policies, figure1_jobs, figure2_job,
+                        make_scheduler, metaflow_priorities, simulate)
 from repro.core.workload import build_job, synth_fb_coflow
 
 
@@ -19,12 +18,14 @@ def main() -> None:
     print("=" * 72)
     print("Figure 1 — two jobs on a 3x3 fabric")
     print("=" * 72)
-    for sched in (VarysScheduler(), MSAScheduler()):
-        res = simulate(figure1_jobs(), sched, n_ports=3,
+    for pname in ("varys", "msa"):
+        res = simulate(figure1_jobs(), make_scheduler(pname), n_ports=3,
                        record_timeline=True)
-        print(f"\n--- {sched.name} ---")
+        print(f"\n--- {pname} ---")
         print(f"avg CCT = {res.avg_cct:.2f}   avg JCT = {res.avg_jct:.2f}"
               f"   (JCTs: J1={res.jct['J1']:.0f}, J2={res.jct['J2']:.0f})")
+        print(f"service order: "
+              f"{' -> '.join(f'{j}/{m}' for j, m in res.mf_service_order)}")
         for t, msg in res.timeline:
             if "finish" in msg or "start" in msg:
                 print(f"   t={t:5.2f}  {msg}")
@@ -43,17 +44,19 @@ def main() -> None:
 
     print()
     print("=" * 72)
-    print("A synthesized Facebook-like job under four policies")
+    print(f"A synthesized Facebook-like job under all registered policies "
+          f"({', '.join(available_policies())})")
     print("=" * 72)
     rng = random.Random(7)
     m, r, sizes = synth_fb_coflow(rng, "job")
     print(f"   job: {m} mappers -> {r} reducers, "
           f"{sum(map(sum, sizes)):.1f} MB total")
-    for sched in (MSAScheduler(), VarysScheduler(), FairScheduler()):
+    for pname in available_policies():
         job = build_job("job", m, r, sizes, "total_order", random.Random(7))
-        res = simulate([job], sched)
-        print(f"   {sched.name:6s}: JCT = {res.avg_jct:8.2f}  "
-              f"(CCT {res.avg_cct:8.2f}, {res.events} events)")
+        res = simulate([job], make_scheduler(pname))
+        print(f"   {pname:6s}: JCT = {res.avg_jct:8.2f}  "
+              f"(CCT {res.avg_cct:8.2f}, {res.events} events, "
+              f"{res.sched_full} full / {res.sched_refresh} cached decisions)")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,18 @@
-"""Schedule a coflow workload (synthesized or real trace file) under all
-policies and report per-topology JCT ratios — the paper's evaluation as a
-CLI.
+"""Schedule a coflow workload (synthesized or real trace file) under a set
+of registry policies and report per-topology JCT ratios — the paper's
+evaluation as a CLI.
 
     PYTHONPATH=src python examples/schedule_trace.py --jobs 20
+    PYTHONPATH=src python examples/schedule_trace.py --policy msa --policy cpath
     PYTHONPATH=src python examples/schedule_trace.py --trace FB2010-1Hr-150-0.txt
 """
 
 import argparse
 
-from repro.core import FairScheduler, MSAScheduler, VarysScheduler, simulate
+from repro.core import available_policies, make_scheduler, simulate
 from repro.core.workload import TOPOLOGIES, load_fb_trace, synth_fb_jobs
+
+DEFAULT_POLICIES = ("msa", "varys", "fair")
 
 
 def main() -> None:
@@ -17,23 +20,32 @@ def main() -> None:
     ap.add_argument("--jobs", type=int, default=20)
     ap.add_argument("--trace", default=None,
                     help="coflow-benchmark trace file (optional)")
+    ap.add_argument("--policy", action="append", default=None,
+                    choices=available_policies(), metavar="NAME",
+                    help="policy to evaluate (repeatable; default: "
+                         f"{', '.join(DEFAULT_POLICIES)})")
     ap.add_argument("--compute-ratio", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=42)
     args = ap.parse_args()
+    policies = tuple(args.policy) if args.policy else DEFAULT_POLICIES
 
     coflows = load_fb_trace(args.trace, limit=args.jobs) if args.trace else None
-    print(f"{'topology':16s} {'msa':>10s} {'varys':>10s} {'fair':>10s} "
-          f"{'varys/msa':>10s}")
+    header = " ".join(f"{p:>10s}" for p in policies)
+    ratio_col = f"{'varys/msa':>10s}" if {"msa", "varys"} <= set(policies) else ""
+    print(f"{'topology':16s} {header} {ratio_col}")
     for topo in TOPOLOGIES:
         avg = {}
-        for sched in (MSAScheduler(), VarysScheduler(), FairScheduler()):
+        for pname in policies:
+            sched = make_scheduler(pname)
             jobs = synth_fb_jobs(args.jobs, topo, seed=args.seed,
                                  compute_ratio=args.compute_ratio,
                                  coflows=coflows)
-            avg[sched.name] = sum(simulate([j], sched).avg_jct
-                                  for j in jobs) / args.jobs
-        print(f"{topo:16s} {avg['msa']:10.2f} {avg['varys']:10.2f} "
-              f"{avg['fair']:10.2f} {avg['varys'] / avg['msa']:10.3f}")
+            avg[pname] = sum(simulate([j], sched).avg_jct
+                             for j in jobs) / args.jobs
+        cells = " ".join(f"{avg[p]:10.2f}" for p in policies)
+        ratio = (f" {avg['varys'] / avg['msa']:10.3f}"
+                 if {"msa", "varys"} <= set(policies) else "")
+        print(f"{topo:16s} {cells}{ratio}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,23 @@
-"""Core metaflow abstraction + MSA scheduling (the paper's contribution)."""
+"""Core metaflow abstraction + scheduling policies (the paper's contribution).
 
-from repro.core.baselines import FairScheduler, FifoScheduler, VarysScheduler
+Policies live in the ``repro.core.sched`` package and are resolved by name
+through its registry (``make_scheduler``/``available_policies``); the
+concrete classes are re-exported here for direct use.
+"""
+
 from repro.core.fabric import Fabric
 from repro.core.metaflow import (ComputeTask, Flow, JobDAG, Metaflow,
                                  figure1_jobs, figure2_job)
-from repro.core.msa import MSAScheduler, metaflow_priorities
+from repro.core.sched import (CriticalPathScheduler, Decision, FairScheduler,
+                              FifoScheduler, MSAScheduler, Scheduler,
+                              VarysScheduler, available_policies,
+                              make_scheduler, metaflow_priorities, register)
 from repro.core.simulator import Perturbation, SimResult, Simulator, simulate
 
 __all__ = [
-    "ComputeTask", "Fabric", "FairScheduler", "FifoScheduler", "Flow",
-    "JobDAG", "MSAScheduler", "Metaflow", "Perturbation", "SimResult",
-    "Simulator", "VarysScheduler", "figure1_jobs", "figure2_job",
-    "metaflow_priorities", "simulate",
+    "ComputeTask", "CriticalPathScheduler", "Decision", "Fabric",
+    "FairScheduler", "FifoScheduler", "Flow", "JobDAG", "MSAScheduler",
+    "Metaflow", "Perturbation", "Scheduler", "SimResult", "Simulator",
+    "VarysScheduler", "available_policies", "figure1_jobs", "figure2_job",
+    "make_scheduler", "metaflow_priorities", "register", "simulate",
 ]

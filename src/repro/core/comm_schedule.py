@@ -35,10 +35,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, ShapeConfig, param_count
-from repro.core.baselines import FifoScheduler, VarysScheduler
 from repro.core.fabric import Fabric
 from repro.core.metaflow import JobDAG
-from repro.core.msa import MSAScheduler
+from repro.core.sched import make_scheduler
 from repro.core.simulator import simulate
 from repro.roofline.analysis import HBM_BW, LINK_BW, PEAK_FLOPS
 
@@ -120,19 +119,16 @@ def plan_step_comm(cfg: ModelConfig, shape: ShapeConfig, chips: int = 256,
 
     U = n_units(cfg)
     steps: dict[str, float] = {}
-    for policy, sched in (("msa", MSAScheduler()),
-                          ("varys", VarysScheduler()),
-                          ("fifo", FifoScheduler())):
+    for policy in ("msa", "varys", "fifo"):
         job = build_train_dag(cfg, shape, chips, link_bw)
-        res = simulate([job], sched, n_ports=2)
+        res = simulate([job], make_scheduler(policy), n_ports=2)
         steps[policy] = res.avg_jct
         if policy == "msa":
-            finish = sorted(
-                ((t, name) for (jn, name), t in res.mf_finish.items()),
-                key=lambda x: x[0])
-            order = [int(name[1:]) for _, name in finish]
+            # The policy's realized transfer order, read straight off the
+            # scheduler's Decisions (first-service order).
+            order = [int(name[1:]) for _, name in res.mf_service_order]
     job = build_train_dag(cfg, shape, chips, link_bw, flat=True)
-    steps["flat"] = simulate([job], MSAScheduler(), n_ports=2).avg_jct
+    steps["flat"] = simulate([job], make_scheduler("msa"), n_ports=2).avg_jct
 
     denom = max(steps["flat"] - steps["msa"], 0.0)
     comm = U * unit_param_bytes(cfg) / chips / link_bw

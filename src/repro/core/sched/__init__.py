@@ -1,0 +1,32 @@
+"""Unified scheduling-policy API.
+
+The policy surface of the reproduction: the ``Scheduler`` contract with
+its event-driven lifecycle, the ``Decision`` it produces (rates + explicit
+metaflow priority order), the string-keyed registry every entry point
+resolves policies through, and the built-in policy family:
+
+    msa    — the paper's Metaflow Scheduling Algorithm (Algorithm 1)
+    varys  — coflow SEBF + MADD (Varys, SIGCOMM'14)
+    fifo   — coflow FIFO by job arrival (Baraat-style)
+    fair   — per-flow max-min fairness
+    cpath  — DAG-critical-path-first (Sincronia-style ordered policy)
+
+See DESIGN.md ("The scheduling-policy contract") for the caching
+semantics and how to add a policy.
+"""
+
+from repro.core.sched.base import Decision, Scheduler
+from repro.core.sched.baselines import (FairScheduler, FifoScheduler,
+                                        VarysScheduler)
+from repro.core.sched.critical_path import CriticalPathScheduler
+from repro.core.sched.msa import (MetaflowPriority, MSAScheduler,
+                                  metaflow_priorities)
+from repro.core.sched.registry import (available_policies, make_scheduler,
+                                       register)
+
+__all__ = [
+    "CriticalPathScheduler", "Decision", "FairScheduler", "FifoScheduler",
+    "MSAScheduler", "MetaflowPriority", "Scheduler", "VarysScheduler",
+    "available_policies", "make_scheduler", "metaflow_priorities",
+    "register",
+]

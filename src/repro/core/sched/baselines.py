@@ -1,0 +1,148 @@
+"""Baseline schedulers the paper compares against (and per-flow fairness).
+
+* ``VarysScheduler`` — coflow-based SEBF + MADD + backfill (Varys,
+  SIGCOMM'14).  Coflow = all active flows of one job (no DAG knowledge).
+* ``FairScheduler``  — per-flow max-min fairness via progressive filling
+  (the classic flow-level baseline the coflow literature improves on).
+* ``FifoScheduler``  — coflow FIFO by job arrival (Baraat-style), for
+  additional context in benchmarks.
+
+Decision-caching behaviour (see sched/base.py):
+
+* Varys/Fifo group flows per job — structure that only changes when the
+  active set does, so compute-task finishes are *clean* for them
+  (``on_node_finish`` returns False) and ``refresh`` reuses the cached
+  grouping.  Varys still re-sorts by effective bottleneck every event
+  (remaining bytes drift); Fifo re-sorts too, but by static arrival keys,
+  so the sort is trivially cheap.
+* Fair redistributes on every remaining-bytes change, so it declares every
+  event dirty and never caches.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metaflow import EPS
+from repro.core.sched.base import Decision, Scheduler
+from repro.core.sched.registry import register
+
+
+def _per_job_structure(view) -> tuple[list[tuple[str, np.ndarray]],
+                                      dict[str, list[str]]]:
+    """Per job with active metaflows: (job_name, concatenated flow
+    indices) groups plus the job's active metaflow names in activation
+    order — everything the coflow policies derive from the active set."""
+    ix_of: dict[str, list[np.ndarray]] = {}
+    names_of: dict[str, list[str]] = {}
+    for rec in view.active:
+        ix_of.setdefault(rec.job.name, []).append(rec.flow_ix)
+        names_of.setdefault(rec.job.name, []).append(rec.name)
+    groups = [(name, np.concatenate(chunks))
+              for name, chunks in ix_of.items()]
+    return groups, names_of
+
+
+class _CoflowScheduler(Scheduler):
+    """Shared machinery: cache the per-job grouping, order it per policy."""
+
+    def __init__(self) -> None:
+        self._structure = None
+
+    def on_node_finish(self, job, name: str) -> bool:
+        return False      # coflow grouping is DAG-blind
+
+    def _ordered(self, view, groups) -> list[tuple[str, np.ndarray]]:
+        raise NotImplementedError
+
+    def _decide(self, view) -> Decision:
+        groups, names_of = self._structure
+        ordered = self._ordered(view, groups)
+        rates = self.ordered_rates(view, [ix for _, ix in ordered])
+        # A coflow covers all of its job's active metaflows equally; expand
+        # the job order into (job, metaflow) pairs in activation order.
+        order = tuple((name, mf) for name, _ in ordered
+                      for mf in names_of[name])
+        return Decision(rates=rates, order=order)
+
+    def schedule(self, view) -> Decision:
+        self._structure = _per_job_structure(view)
+        return self._decide(view)
+
+    def refresh(self, view, prev: Decision) -> Decision:
+        if self._structure is None:
+            return self.schedule(view)
+        return self._decide(view)
+
+
+@register("varys")
+class VarysScheduler(_CoflowScheduler):
+    """Smallest-Effective-Bottleneck-First over coflows, MADD rates."""
+
+    def _ordered(self, view, groups):
+        return sorted(groups,
+                      key=lambda kv: (view.bottleneck_time(kv[1]), kv[0]))
+
+
+@register("fifo")
+class FifoScheduler(_CoflowScheduler):
+    """Coflows served in job-arrival order, MADD within a coflow."""
+
+    def _ordered(self, view, groups):
+        arrival = {j.name: (j.arrival, j.name) for j in view.jobs}
+        return sorted(groups, key=lambda kv: arrival[kv[0]])
+
+
+@register("fair")
+class FairScheduler(Scheduler):
+    """Per-flow max-min fairness (progressive filling / water-filling).
+
+    Redistributes whenever any flow's remaining bytes change, so every
+    event is a full reschedule (no cacheable structure, no meaningful
+    priority order)."""
+
+    def on_node_finish(self, job, name: str) -> bool:
+        return True
+
+    def on_flow_finish(self, job, mf_name: str) -> bool:
+        return True
+
+    def schedule(self, view) -> Decision:
+        all_ix = np.concatenate([rec.flow_ix for rec in view.active])
+        all_ix = all_ix[view.rem[all_ix] > EPS]
+        rates = np.zeros_like(view.rem)
+        if all_ix.size == 0:
+            return Decision(rates=rates)
+        eg = view.egress.copy()
+        ing = view.ingress.copy()
+        src = view.src[all_ix]
+        dst = view.dst[all_ix]
+        alive = np.ones(all_ix.size, dtype=bool)
+        # Progressive filling: each round saturates >=1 port, so the loop
+        # runs at most 2 * n_ports times.
+        for _ in range(2 * view.n_ports + 1):
+            if not alive.any():
+                break
+            n_out = np.bincount(src[alive], minlength=view.n_ports)
+            n_in = np.bincount(dst[alive], minlength=view.n_ports)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                inc = min(
+                    np.where(n_out > 0, eg / np.maximum(n_out, 1),
+                             np.inf).min(),
+                    np.where(n_in > 0, ing / np.maximum(n_in, 1),
+                             np.inf).min())
+            if not np.isfinite(inc):
+                break
+            if inc > EPS:
+                rates[all_ix[alive]] += inc
+                eg -= n_out * inc
+                ing -= n_in * inc
+                np.clip(eg, 0.0, None, out=eg)
+                np.clip(ing, 0.0, None, out=ing)
+            # Freeze flows touching an exhausted port.
+            saturated = (eg[src] <= EPS) | (ing[dst] <= EPS)
+            newly = alive & saturated
+            if not newly.any() and inc <= EPS:
+                break
+            alive &= ~saturated
+        return Decision(rates=rates)

@@ -15,6 +15,14 @@ simulator, compute finishes, since those can activate metaflows):
   3. *Bandwidth assignment*: walk the sorted list, MADD each metaflow on the
      residual port capacity, then backfill leftovers (work conservation).
 
+Decision-caching split (see sched/base.py): the *classification* —
+direct/indirect, gain numerators, consumer requirement masks — only
+changes when a DAG node finishes or a job arrives, so ``schedule()``
+caches it and ``refresh()`` recomputes just the remaining-bytes-dependent
+keys (gains, attributes) and the rate assignment.  The key arithmetic in
+both paths is expression-for-expression identical, so cached runs are
+bit-exact against full recomputation.
+
 Gain-numerator ambiguity (documented in DESIGN.md §8): the paper's Figure-2
 prose sums ``load_c2 + load_c4`` for MF2 although c4 also consumes MF4.  We
 implement both readings:
@@ -34,9 +42,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
-
 from repro.core.metaflow import EPS, JobDAG, Metaflow
+from repro.core.sched.base import Decision, Scheduler
+from repro.core.sched.registry import register
 
 
 @dataclass(frozen=True)
@@ -55,6 +63,32 @@ class MetaflowPriority:
         if self.direct:
             return (0, -self.gain, self.job, self.name)
         return (1, self.attribute, self.job, self.name)
+
+
+def _indirect_attr(job_name: str, cmasks: list[int],
+                   bit_rem: dict[int, float],
+                   attr_cache: dict[tuple[str, int], float],
+                   rem: float) -> float:
+    """Indirect attribute: nearest consumer's outstanding metaflow bytes.
+
+    Shared by the full and cached priority paths — the caching contract
+    (refresh bit-identical to schedule) hangs on both paths running this
+    exact float arithmetic, so there is deliberately one copy."""
+    attr = float("inf")
+    for mask in cmasks:
+        key = (job_name, mask)
+        if key not in attr_cache:
+            total, mm, b = 0.0, mask, 0
+            while mm:
+                if mm & 1:
+                    total += bit_rem[b]
+                mm >>= 1
+                b += 1
+            attr_cache[key] = total
+        attr = min(attr, attr_cache[key])
+    if attr == float("inf"):
+        attr = rem
+    return attr
 
 
 def _descendant_closure(job: JobDAG, roots: list[str]) -> set[str]:
@@ -76,7 +110,11 @@ def _descendant_closure(job: JobDAG, roots: list[str]) -> set[str]:
 
 def metaflow_priorities(jobs: list[JobDAG], active: list[tuple[JobDAG, Metaflow]],
                         gain_mode: str = "unlockable") -> list[MetaflowPriority]:
-    """Step 1+2 of MSA: gains for every active metaflow, sorted."""
+    """Step 1+2 of MSA: gains for every active metaflow, sorted.
+
+    Pure frozenset reference implementation — the bitmask fast path inside
+    :class:`MSAScheduler` is cross-checked against this by a hypothesis
+    property test."""
     prios: list[MetaflowPriority] = []
     req_by_job = {j.name: j.unfinished_mf_requirements() for j in jobs}
 
@@ -114,23 +152,26 @@ def metaflow_priorities(jobs: list[JobDAG], active: list[tuple[JobDAG, Metaflow]
     return prios
 
 
-class MSAScheduler:
-    """Rate-assignment policy implementing paper Algorithm 1 + backfill.
+@register("msa")
+class MSAScheduler(Scheduler):
+    """Paper Algorithm 1 + backfill on the simulator's vectorized view.
 
-    Operates on the simulator's vectorized ``SchedView``; the priority logic
-    is the bitmask fast path of :func:`metaflow_priorities` (cross-checked by
-    a hypothesis property test).
+    The priority logic is the bitmask fast path of
+    :func:`metaflow_priorities`; the cached structure maps each active
+    metaflow ordinal to either ``("D", load)`` (direct, gain numerator) or
+    ``("I", [mask, ...])`` (indirect, per-consumer requirement bitmasks).
     """
-
-    name = "msa"
 
     def __init__(self, gain_mode: str = "unlockable") -> None:
         if gain_mode not in ("unlockable", "descendants"):
             raise ValueError(f"unknown gain_mode {gain_mode!r}")
         self.gain_mode = gain_mode
+        self._structure: dict[int, tuple] | None = None
 
-    def _priorities(self, view) -> list[tuple[tuple, object]]:
+    # ---------------------------------------------------------- full path
+    def _full_priorities(self, view) -> tuple[list, dict[int, tuple]]:
         keyed = []
+        structure: dict[int, tuple] = {}
         bit_rem_cache: dict[str, dict[int, float]] = {}
         attr_cache: dict[tuple[str, int], float] = {}
         for rec in view.active:
@@ -148,39 +189,63 @@ class MSAScheduler:
                     roots = [c for c in consumers if masks[c] == bit]
                     names = set(roots) | _descendant_closure(job, roots)
                     load = sum(job.tasks[n].load for n in names)
+                structure[rec.ordinal] = ("D", load)
                 keyed.append(((0, -load / rem, job.name, rec.name), rec))
             else:
                 if job.name not in bit_rem_cache:
                     bit_rem_cache[job.name] = view.job_bit_remaining(job)
                 bit_rem = bit_rem_cache[job.name]
-                attr = float("inf")
-                for c in consumers:
-                    mask = masks[c]
-                    key = (job.name, mask)
-                    if key not in attr_cache:
-                        total, mm, b = 0.0, mask, 0
-                        while mm:
-                            if mm & 1:
-                                total += bit_rem[b]
-                            mm >>= 1
-                            b += 1
-                        attr_cache[key] = total
-                    attr = min(attr, attr_cache[key])
-                if attr == float("inf"):
-                    attr = rem
+                cmasks = [masks[c] for c in consumers]
+                structure[rec.ordinal] = ("I", cmasks)
+                attr = _indirect_attr(job.name, cmasks, bit_rem,
+                                      attr_cache, rem)
+                keyed.append(((1, attr, job.name, rec.name), rec))
+        keyed.sort(key=lambda kr: kr[0])
+        return keyed, structure
+
+    def _priorities(self, view) -> list[tuple[tuple, object]]:
+        """Full keyed priority list (cross-checked by the property test)."""
+        keyed, _ = self._full_priorities(view)
+        return keyed
+
+    # -------------------------------------------------------- cached path
+    def _cached_priorities(self, view) -> list | None:
+        structure = self._structure
+        keyed = []
+        bit_rem_cache: dict[str, dict[int, float]] = {}
+        attr_cache: dict[tuple[str, int], float] = {}
+        for rec in view.active:
+            ent = structure.get(rec.ordinal)
+            if ent is None:          # active set drifted — shouldn't happen
+                return None
+            job = rec.job
+            rem = max(view.mf_remaining(rec), EPS)
+            if ent[0] == "D":
+                keyed.append(((0, -ent[1] / rem, job.name, rec.name), rec))
+            else:
+                if job.name not in bit_rem_cache:
+                    bit_rem_cache[job.name] = view.job_bit_remaining(job)
+                attr = _indirect_attr(job.name, ent[1],
+                                      bit_rem_cache[job.name], attr_cache, rem)
                 keyed.append(((1, attr, job.name, rec.name), rec))
         keyed.sort(key=lambda kr: kr[0])
         return keyed
 
-    def assign_rates(self, view):
-        rates = np.zeros_like(view.rem)
-        res_eg = view.egress.copy()
-        res_in = view.ingress.copy()
-        order = []
-        for _, rec in self._priorities(view):
-            view.madd(rec.flow_ix, res_eg, res_in, rates)
-            order.append(rec.flow_ix)
-        if order:
-            ordered = np.concatenate(order)
-            view.backfill(ordered, res_eg, res_in, rates)
-        return rates
+    # ------------------------------------------------------------- decide
+    def _decide(self, view, keyed) -> Decision:
+        groups = [rec.flow_ix for _, rec in keyed]
+        rates = self.ordered_rates(view, groups)
+        order = tuple((rec.job.name, rec.name) for _, rec in keyed)
+        return Decision(rates=rates, order=order)
+
+    def schedule(self, view) -> Decision:
+        keyed, self._structure = self._full_priorities(view)
+        return self._decide(view, keyed)
+
+    def refresh(self, view, prev: Decision) -> Decision:
+        if self._structure is None:
+            return self.schedule(view)
+        keyed = self._cached_priorities(view)
+        if keyed is None:
+            return self.schedule(view)
+        return self._decide(view, keyed)

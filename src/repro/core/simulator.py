@@ -5,19 +5,31 @@ generalized to multi-stage DAGs (metaflows may have producer compute tasks)
 and multi-job arrival processes.
 
 Fluid model: between events, every flow transfers at a constant rate chosen
-by the pluggable scheduler and every runnable compute task progresses at the
-machine speed.  Events: job arrival, flow/metaflow completion, compute
-completion, and fabric perturbations (straggler injection).  Rates are
-recomputed at every event — the paper's Algorithm-1 trigger ("metaflow
-arrives or finishes") plus compute completions, which can activate
-producer-gated metaflows.
+by the pluggable scheduling policy and every runnable compute task
+progresses at the machine speed.  Events: job arrival, flow/metaflow
+completion, compute completion, and fabric perturbations (straggler
+injection).
+
+Scheduling is event-driven through the ``repro.core.sched`` lifecycle:
+policies are ``attach``-ed once, notified of arrivals / node finishes /
+perturbations, and asked for a full ``schedule()`` only on events that
+dirty their cached structure — the paper's Algorithm-1 trigger ("metaflow
+arrives or finishes") generalized per policy.  On clean events the
+previous ``Decision``'s structure is reused via the cheap ``refresh()``
+path, which recomputes only remaining-bytes-dependent keys and rates; the
+two paths are bit-identical by the policy contract, so caching never
+changes results (``cache_decisions=False`` forces the full path every
+event and is asserted equivalent in tests).
 
 Implementation notes (perf): flows live in flat numpy arrays (src / dst /
-remaining) grouped by metaflow; schedulers receive a ``SchedView`` and
-return a dense per-flow rate vector.  DAG bookkeeping (runnable frontier,
-unfinished-metaflow requirement bitmasks) is incremental — recomputed only
-when a node finishes, never per event.  This keeps wide Facebook-trace jobs
-(hundreds of reducers, thousands of flows) tractable in pure Python.
+remaining) grouped by metaflow; policies receive a ``SchedView`` that is
+built once per run and updated incrementally — jobs and metaflow records
+enter at admission and leave at retirement, capacities refresh only on
+perturbations — so per-event work is O(changed), not O(jobs × metaflows).
+DAG bookkeeping (runnable frontier, unfinished-metaflow requirement
+bitmasks) is likewise incremental, recomputed only when a node finishes.
+This keeps wide Facebook-trace jobs (hundreds of reducers, thousands of
+flows) tractable in pure Python.
 """
 
 from __future__ import annotations
@@ -39,6 +51,11 @@ class SimResult:
     makespan: float
     events: int
     timeline: list[tuple[float, str]] = field(default_factory=list)
+    sched_full: int = 0                   # full schedule() computations
+    sched_refresh: int = 0                # cheap refresh() reuses
+    # Metaflows in first-service order (first positive rate), priority-
+    # ordered within one decision — the policy's realized transfer order.
+    mf_service_order: list[tuple[str, str]] = field(default_factory=list)
 
     @property
     def avg_jct(self) -> float:
@@ -71,7 +88,12 @@ class ActiveMF:
 
 @dataclass
 class SchedView:
-    """Everything a rate-assignment policy may look at for one round."""
+    """Everything a rate-assignment policy may look at for one round.
+
+    Owned by the simulator and updated incrementally: the flow arrays are
+    the live simulation state, ``jobs``/``mf_records`` track admissions and
+    retirements, ``active`` changes only on activation/finish events, and
+    the capacity vectors refresh on perturbations."""
 
     t: float
     n_ports: int
@@ -82,7 +104,7 @@ class SchedView:
     ingress: np.ndarray
     active: list[ActiveMF]
     jobs: list[JobDAG]     # live (arrived, unfinished) jobs
-    mf_records: dict[str, list[ActiveMF]]  # job name -> ALL its mf records
+    mf_records: dict[str, list[ActiveMF]]  # live job name -> ALL its records
 
     def mf_remaining(self, a: ActiveMF) -> float:
         return float(self.rem[a.flow_ix].sum())
@@ -169,7 +191,8 @@ class Simulator:
                  machine_speed: float = 1.0,
                  perturbations: list[Perturbation] | None = None,
                  record_timeline: bool = False,
-                 max_events: int = 5_000_000) -> None:
+                 max_events: int = 5_000_000,
+                 cache_decisions: bool = True) -> None:
         for j in jobs:
             j.validate()
         names = [j.name for j in jobs]
@@ -182,7 +205,9 @@ class Simulator:
         self.perturbations = sorted(perturbations or [], key=lambda p: p.time)
         self.record_timeline = record_timeline
         self.max_events = max_events
+        self.cache_decisions = cache_decisions
         self._build_tables()
+        scheduler.attach(fabric, self.jobs)
 
     # ------------------------------------------------------------- tables
     def _build_tables(self) -> None:
@@ -191,6 +216,7 @@ class Simulator:
         rem: list[float] = []
         self._mfs: list[ActiveMF] = []          # ordinal -> record
         self._mf_of_job: dict[str, list[int]] = {}
+        self._mf_ord: dict[tuple[str, str], int] = {}  # (job, name) -> ordinal
         for j in self.jobs:
             for p in j.ports_used():
                 if not (0 <= p < self.fabric.n_ports):
@@ -209,6 +235,7 @@ class Simulator:
                                ordinal=len(self._mfs), flow_ix=ix)
                 self._mfs.append(rec)
                 self._mf_of_job[j.name].append(rec.ordinal)
+                self._mf_ord[(j.name, name)] = rec.ordinal
         self._src = np.asarray(src, dtype=np.int32)
         self._dst = np.asarray(dst, dtype=np.int32)
         self._rem = np.asarray(rem, dtype=np.float64)
@@ -230,6 +257,7 @@ class Simulator:
         task_finish: dict[tuple[str, str], float] = {}
         last_flow: dict[str, float] = {}
         events = 0
+        sched = self.scheduler
 
         live_jobs: list[JobDAG] = []
         running: list[tuple[JobDAG, ComputeTask]] = []
@@ -239,13 +267,36 @@ class Simulator:
         pending_deps: dict[str, dict[str, int]] = {}
         unfinished_nodes: dict[str, int] = {}
 
+        # Decision cache + incremental policy view.  The `active` dict is
+        # the single source of truth for the active set; `view.active` is
+        # re-derived from it (insertion-ordered) only when it changed, and
+        # the `allowed` flow mask is updated at the same two sites.
+        dirty = True
+        active_changed = False
+        decision = None
+        sched_full = 0
+        sched_refresh = 0
+        allowed = np.zeros(len(self._rem), dtype=bool)
+        view = SchedView(
+            t=0.0, n_ports=self.fabric.n_ports,
+            src=self._src, dst=self._dst, rem=self._rem,
+            egress=np.asarray(self.fabric.egress, dtype=np.float64),
+            ingress=np.asarray(self.fabric.ingress, dtype=np.float64),
+            active=[], jobs=live_jobs, mf_records={})
+        # First-service bookkeeping for SimResult.mf_service_order.
+        unserved: set[int] = set()
+        service_order: list[tuple[str, str]] = []
+
         def log(msg: str) -> None:
             if self.record_timeline:
                 timeline.append((t, msg))
 
         def node_finished(job: JobDAG, name: str) -> None:
             """Cascade a node completion through the frontier."""
+            nonlocal dirty
             job.mark_dirty()
+            if sched.on_node_finish(job, name):
+                dirty = True
             unfinished_nodes[job.name] -= 1
             for child in children[job.name].get(name, ()):  # noqa: B023
                 pending_deps[job.name][child] -= 1
@@ -253,31 +304,62 @@ class Simulator:
                     activate(job, child)
 
         def activate(job: JobDAG, name: str) -> None:
+            nonlocal dirty, active_changed
             node = job.node(name)
             if isinstance(node, ComputeTask):
                 node.start_time = t
                 running.append((job, node))
                 log(f"start {job.name}/{name}")
             else:
-                rec = self._mfs[self._mf_ordinal(job, name)]
+                rec = self._mfs[self._mf_ord[(job.name, name)]]
                 if self._mf_live[rec.ordinal] == 0:   # empty/zero metaflow
                     finish_metaflow(rec)
                 else:
                     active[rec.ordinal] = rec
+                    allowed[rec.flow_ix] = True
+                    unserved.add(rec.ordinal)
+                    dirty = True
+                    active_changed = True
                     log(f"activate {job.name}/{name}")
 
         def finish_metaflow(rec: ActiveMF) -> None:
+            nonlocal dirty, active_changed
             rec.mf.finish_time = t
             for f in rec.mf.flows:
                 f.remaining = 0.0
             mf_finish[(rec.job.name, rec.name)] = t
             last_flow[rec.job.name] = t
-            active.pop(rec.ordinal, None)
+            if active.pop(rec.ordinal, None) is not None:
+                allowed[rec.flow_ix] = False
+                active_changed = True
+            unserved.discard(rec.ordinal)
+            dirty = True
             log(f"finish {rec.job.name}/{rec.name}")
             node_finished(rec.job, rec.name)
 
+        def record_service(decision, rates) -> None:
+            """First time a metaflow transfers, append it to the service
+            order — priority-ordered within a single decision."""
+            newly = [o for o in unserved
+                     if float(rates[self._mfs[o].flow_ix].sum()) > EPS]
+            if not newly:
+                return
+            pos = {key: i for i, key in enumerate(decision.order)}
+            n = len(pos)
+            newly.sort(key=lambda o: (pos.get((self._mfs[o].job.name,
+                                               self._mfs[o].name), n), o))
+            for o in newly:
+                unserved.discard(o)
+                service_order.append((self._mfs[o].job.name,
+                                      self._mfs[o].name))
+
         def admit(job: JobDAG) -> None:
+            nonlocal dirty
             live_jobs.append(job)
+            view.mf_records[job.name] = [self._mfs[o]
+                                         for o in self._mf_of_job[job.name]]
+            if sched.on_job_arrival(job):
+                dirty = True
             ch: dict[str, list[str]] = {}
             pend: dict[str, int] = {}
             n_nodes = 0
@@ -291,9 +373,12 @@ class Simulator:
             pending_deps[job.name] = pend
             unfinished_nodes[job.name] = n_nodes
             log(f"arrive {job.name}")
-            for name, k in pend.items():
-                if k == 0:
-                    activate(job, name)
+            # Snapshot the dep-free roots before activating: activating a
+            # zero-size metaflow cascades node_finished into this same
+            # `pend` dict, and re-reading live counts would double-activate
+            # (and double-finish) nodes the cascade already handled.
+            for name in [n for n, k in pend.items() if k == 0]:
+                activate(job, name)
 
         while pending or live_jobs:
             events += 1
@@ -304,30 +389,29 @@ class Simulator:
                 admit(pending.pop(0))
 
             # ---- rates from the policy under test
-            act_list = list(active.values())
-            view = SchedView(
-                t=t, n_ports=self.fabric.n_ports,
-                src=self._src, dst=self._dst, rem=self._rem,
-                egress=np.asarray(self.fabric.egress, dtype=np.float64),
-                ingress=np.asarray(self.fabric.ingress, dtype=np.float64),
-                active=act_list, jobs=live_jobs,
-                mf_records={j.name: [self._mfs[o]
-                                     for o in self._mf_of_job[j.name]]
-                            for j in live_jobs})
-            if act_list:
-                rates = self.scheduler.assign_rates(view)
+            view.t = t
+            if active_changed:
+                view.active = list(active.values())
+                active_changed = False
+            if view.active:
+                if dirty or decision is None or not self.cache_decisions:
+                    decision = sched.schedule(view)
+                    sched_full += 1
+                    dirty = False
+                else:
+                    decision = sched.refresh(view, decision)
+                    sched_refresh += 1
                 # Only active metaflows may transfer, whatever the policy says.
-                allowed = np.zeros(len(self._rem), dtype=bool)
-                for rec in act_list:
-                    allowed[rec.flow_ix] = True
-                rates = np.where(allowed, rates, 0.0)
+                rates = np.where(allowed, decision.rates, 0.0)
                 self._check_capacity(rates, view)
+                if unserved:
+                    record_service(decision, rates)
             else:
                 rates = np.zeros_like(self._rem)
 
             # ---- next event horizon
             dt = float("inf")
-            flowing = rates > EPS
+            flowing = (rates > EPS) & (self._rem > EPS)
             if flowing.any():
                 dt = float((self._rem[flowing] / rates[flowing]).min())
             for _, task in running:
@@ -356,6 +440,10 @@ class Simulator:
             while perts and perts[0].time <= t + EPS:
                 p = perts.pop(0)
                 self.fabric.degrade(p.port, p.factor)
+                view.egress = np.asarray(self.fabric.egress, dtype=np.float64)
+                view.ingress = np.asarray(self.fabric.ingress, dtype=np.float64)
+                sched.on_perturbation(p)
+                dirty = True
                 log(f"degrade port {p.port} x{p.factor}")
 
             # ---- commit flow / metaflow completions
@@ -369,6 +457,8 @@ class Simulator:
                     last_flow[rec.job.name] = t
                     if self._mf_live[ordinal] == 0 and ordinal in active:
                         finish_metaflow(rec)
+                    elif sched.on_flow_finish(rec.job, rec.name):
+                        dirty = True
 
             # ---- commit compute completions
             if running:
@@ -388,6 +478,7 @@ class Simulator:
                 for j in [j for j in live_jobs if unfinished_nodes[j.name] == 0]:
                     j.finish_time = t
                     live_jobs.remove(j)
+                    del view.mf_records[j.name]
                     log(f"done {j.name}")
 
         jct = {j.name: (j.finish_time or 0.0) - j.arrival for j in self.jobs}
@@ -395,13 +486,9 @@ class Simulator:
                for j in self.jobs}
         return SimResult(jct=jct, cct=cct, mf_finish=mf_finish,
                          task_finish=task_finish, makespan=t, events=events,
-                         timeline=timeline)
-
-    def _mf_ordinal(self, job: JobDAG, name: str) -> int:
-        for o in self._mf_of_job[job.name]:
-            if self._mfs[o].name == name:
-                return o
-        raise KeyError((job.name, name))
+                         timeline=timeline, sched_full=sched_full,
+                         sched_refresh=sched_refresh,
+                         mf_service_order=service_order)
 
     def _check_capacity(self, rates: np.ndarray, view: SchedView) -> None:
         """Invariant: the policy never oversubscribes a port."""

@@ -77,6 +77,7 @@ _HLO_PROBE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 class TestHLOOrder:
     def test_hlo_allreduce_order_matches_msa_order(self, tmp_path):
         """Compile ordered_psum with a shuffled priority order on a 4-way

@@ -10,6 +10,8 @@ from repro.kernels import ref
 from repro.kernels import rmsnorm as rn
 from repro.kernels import ssd_scan as ssd
 
+pytestmark = pytest.mark.slow
+
 TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
         jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
 

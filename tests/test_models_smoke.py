@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ARCH_NAMES, get_config
 from repro.models import get_model
 
+pytestmark = pytest.mark.slow
+
 BATCH, SEQ = 2, 64
 
 

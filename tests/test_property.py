@@ -14,11 +14,16 @@ Invariants:
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; the rest of the suite must "
+           "still collect and run without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Fabric, FairScheduler, JobDAG, MSAScheduler,
                         VarysScheduler, metaflow_priorities, simulate)
-from repro.core.msa import MetaflowPriority
+from repro.core.sched.msa import MetaflowPriority
 
 
 @st.composite

@@ -98,6 +98,19 @@ def test_zero_size_metaflow_completes_immediately():
     assert res.jct["j"] == pytest.approx(1.0)
 
 
+def test_chained_zero_size_metaflows_complete():
+    """A zero-size metaflow gated on another zero-size metaflow must
+    cascade-finish exactly once at admission (re-reading live dep counts
+    in admit() used to double-activate the chained node and deadlock)."""
+    j = JobDAG(name="j")
+    j.add_metaflow("M1", flows=[(0, 1, 0.0)])
+    j.add_metaflow("M2", flows=[(0, 2, 0.0)], deps=["M1"])
+    j.add_task("c", load=1.0, deps=["M2"])
+    res = simulate([j], MSAScheduler(), n_ports=3)
+    assert res.jct["j"] == pytest.approx(1.0)
+    assert res.mf_finish[("j", "M1")] == res.mf_finish[("j", "M2")] == 0.0
+
+
 def test_multi_job_shared_fabric_msa_vs_fair():
     """MSA (DAG-aware) never loses to fair sharing on avg JCT for chains."""
     import random
