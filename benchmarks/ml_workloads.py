@@ -1,0 +1,109 @@
+"""ML-parallelism workloads: every registered policy x appdag scenarios.
+
+The bridge benchmark the appdag subsystem exists for: real parallelism
+plans (dense-DP training, MoE EP training, pipelined serving, and the
+mixed cluster sharing one fabric with MapReduce) compiled into JobDAGs
+and swept across scheduling policies, reporting per-policy average
+JCT / CCT per scenario.
+
+Harness rows (``benchmarks/run.py``): one row per scenario,
+``derived = "<policy>=<jct>/<cct>;..."`` plus ``fifo_over_msa`` /
+``fair_over_msa`` ratios when those policies ran.
+
+Standalone:
+  PYTHONPATH=src python benchmarks/ml_workloads.py [--policy NAME ...]
+      [--scenario NAME ...] [--seed N] [--quick]
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.appdag import SCENARIOS, build_scenario
+from repro.core import available_policies, make_scheduler, simulate
+
+DEFAULT_POLICIES = ("msa", "varys", "fifo", "fair", "cpath")
+
+
+def run(quick: bool = False, policies=None, seed: int = 0) -> list[tuple]:
+    policies = tuple(policies) if policies else DEFAULT_POLICIES
+    rows = []
+    for scen in SCENARIOS:
+        t0 = time.perf_counter()
+        cells = []
+        for pname in policies:
+            n_ports, jobs = build_scenario(scen, seed=seed, quick=quick)
+            res = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
+            if len(res.jct) != len(jobs):
+                raise AssertionError(
+                    f"{scen}/{pname}: {len(res.jct)} JCTs for "
+                    f"{len(jobs)} jobs")
+            cells.append((pname, res.avg_jct, res.avg_cct))
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ";".join(f"{p}={j:.3f}/{c:.3f}" for p, j, c in cells)
+        jct = {p: j for p, j, _ in cells}
+        if "msa" in jct:
+            for p in ("fifo", "fair"):
+                if p in jct:
+                    derived += f";{p}_over_msa={jct[p] / jct['msa']:.3f}"
+        rows.append((f"ml/{scen}", us, derived))
+    return rows
+
+
+def check(rows) -> list[str]:
+    """Sanity gates: every policy completes every scenario with finite
+    positive JCTs; where the default set ran, MSA (DAG-aware) beats
+    per-flow fairness everywhere and beats DAG-blind FIFO on the mixed
+    cluster — the scenario the paper's abstraction exists for."""
+    errs = []
+    for name, _, derived in rows:
+        parts = dict(kv.split("=", 1) for kv in derived.split(";"))
+        ratios = {k: float(v) for k, v in parts.items()
+                  if k.endswith("_over_msa")}
+        for p, v in parts.items():
+            if p.endswith("_over_msa"):
+                continue
+            jct, cct = (float(x) for x in v.split("/"))
+            if not (0 < jct < float("inf")) or not (0 <= cct <= jct + 1e-9):
+                errs.append(f"{name}: degenerate {p} jct/cct {v}")
+        if "fair_over_msa" in ratios and ratios["fair_over_msa"] < 1.0:
+            errs.append(f"{name}: MSA loses to per-flow fairness "
+                        f"({ratios['fair_over_msa']:.3f})")
+        if name == "ml/mixed" and "fifo_over_msa" in ratios \
+                and ratios["fifo_over_msa"] < 1.05:
+            errs.append(f"mixed cluster: DAG-awareness shows no win over "
+                        f"FIFO ({ratios['fifo_over_msa']:.3f})")
+    return errs
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--policy", action="append", default=None,
+                    choices=available_policies(), metavar="NAME",
+                    help="policy to run (repeatable; default: "
+                         f"{', '.join(DEFAULT_POLICIES)})")
+    ap.add_argument("--scenario", action="append", default=None,
+                    choices=sorted(SCENARIOS), metavar="NAME",
+                    help="scenario to run (repeatable; default: all)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    policies = tuple(args.policy) if args.policy else DEFAULT_POLICIES
+    scenarios = tuple(args.scenario) if args.scenario else tuple(SCENARIOS)
+
+    for scen in scenarios:
+        n_ports, jobs = build_scenario(scen, seed=args.seed, quick=args.quick)
+        print(f"\n== {scen}  ({n_ports} ports, {len(jobs)} jobs, "
+              f"{sum(len(j.metaflows) for j in jobs)} metaflows) ==")
+        print(f"  {'policy':<8} {'avg JCT':>12} {'avg CCT':>12}")
+        for pname in policies:
+            n_ports, jobs = build_scenario(scen, seed=args.seed,
+                                           quick=args.quick)
+            res = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
+            print(f"  {pname:<8} {res.avg_jct:>12.3f} {res.avg_cct:>12.3f}")
+
+
+if __name__ == "__main__":
+    main()

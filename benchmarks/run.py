@@ -25,12 +25,13 @@ import sys
 from repro.core.sched import available_policies
 
 from benchmarks import (comm_overlap, fig1_motivation, fig3_topologies,
-                        roofline_table, sched_micro)
+                        ml_workloads, roofline_table, sched_micro)
 
 BENCHES = {
     "fig1_motivation": fig1_motivation,
     "fig3_topologies": fig3_topologies,
     "comm_overlap": comm_overlap,
+    "ml_workloads": ml_workloads,
     "sched_micro": sched_micro,
     "roofline_table": roofline_table,
 }

@@ -1,0 +1,29 @@
+"""``repro.appdag`` — compile real ML parallelism plans into metaflow DAGs.
+
+The bridge between the two halves of this repo: the JAX substrate's model
+configs and parallelism axes (DP/TP/PP/EP) on one side, the scheduling
+core's ``JobDAG`` workloads on the other.  Three layers (DESIGN.md §9):
+
+  ``lowering``  logical collectives -> per-port flow rounds with exact
+                byte accounting (ring / halving-doubling / direct),
+  ``plans``     model config x ``PlanAxes`` -> per-step communication DAG
+                with compute nodes between collectives (dense training,
+                MoE training, pipelined serving),
+  ``mixer``     job templates x arrival process -> mixed-cluster
+                scenarios (training + serving + MapReduce on one fabric).
+"""
+
+from repro.appdag.lowering import (ALGORITHMS, COLLECTIVES,
+                                   LoweredCollective, add_lowered,
+                                   lower_collective, lower_grouped)
+from repro.appdag.mixer import (SCENARIOS, JobTemplate, build_scenario,
+                                poisson_mix)
+from repro.appdag.plans import (PlanAxes, dense_train_dag, moe_train_dag,
+                                n_units, pipeline_serve_dag, unit_grad_bytes)
+
+__all__ = [
+    "ALGORITHMS", "COLLECTIVES", "JobTemplate", "LoweredCollective",
+    "PlanAxes", "SCENARIOS", "add_lowered", "build_scenario",
+    "dense_train_dag", "lower_collective", "lower_grouped", "moe_train_dag",
+    "n_units", "pipeline_serve_dag", "poisson_mix", "unit_grad_bytes",
+]

@@ -1,0 +1,187 @@
+"""Arrival-process mixer: job templates -> mixed-cluster scenarios.
+
+Composes the appdag plan extractors with the FB MapReduce synth
+(``core/workload.py``) into multi-job scenarios sharing one fabric: each
+template DAG is built once at ``port_base=0`` and stamped out via
+``JobDAG.instantiate`` with a Poisson arrival time and a random contiguous
+port placement (the port-numbering convention of DESIGN.md §9: a job
+occupies ``[offset, offset + span)``).
+
+``SCENARIOS`` registers the four canonical scenarios the ML-workload
+benchmark sweeps (dense-DP training, MoE EP training, pipelined serving,
+and the mixed cluster where all three share the fabric with MapReduce);
+``build_scenario(name, seed, quick)`` returns ``(n_ports, jobs)`` with
+fresh job objects every call (simulation mutates jobs).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+from repro.appdag.plans import (PlanAxes, dense_train_dag, moe_train_dag,
+                                pipeline_serve_dag)
+from repro.configs import get_config
+from repro.configs.base import LM_SHAPES
+from repro.core.metaflow import JobDAG
+from repro.core.workload import build_job, synth_fb_coflow
+
+
+@dataclass(frozen=True)
+class JobTemplate:
+    """One job species in a mix: a template DAG plus its sampling weight."""
+
+    name: str
+    dag: JobDAG
+    weight: float = 1.0
+
+    @property
+    def span(self) -> int:
+        """Contiguous port block the template occupies, counting both flow
+        endpoints and compute-task machines (a compute-only job — e.g. a
+        dp=1 plan — still lives *on* its device's port)."""
+        top = max(self.dag.ports_used(), default=-1)
+        for t in self.dag.tasks.values():
+            top = max(top, t.machine)
+        return top + 1
+
+
+def poisson_mix(templates: list[JobTemplate], n_jobs: int, n_ports: int,
+                mean_interarrival: float, seed: int = 0) -> list[JobDAG]:
+    """Sample ``n_jobs`` arrivals: template by weight, Poisson spacing,
+    uniform-random contiguous placement on the fabric."""
+    rng = random.Random(seed)
+    weights = [t.weight for t in templates]
+    for t in templates:
+        if t.span > n_ports:
+            raise ValueError(f"template {t.name!r} needs {t.span} ports, "
+                             f"fabric has {n_ports}")
+    jobs: list[JobDAG] = []
+    t_now = 0.0
+    for i in range(n_jobs):
+        tpl = rng.choices(templates, weights=weights)[0]
+        offset = rng.randrange(0, n_ports - tpl.span + 1)
+        jobs.append(tpl.dag.instantiate(name=f"{tpl.name}#{i}",
+                                        arrival=t_now, port_offset=offset))
+        t_now += rng.expovariate(1.0 / mean_interarrival)
+    return jobs
+
+
+def comm_balanced(job: JobDAG, ratio: float = 1.0) -> JobDAG:
+    """Rescale a template's comm into the balanced regime (DESIGN.md §8.3
+    applied to plan-extracted DAGs, §9): at pod-scale world sizes the TPU
+    fabric makes per-step collectives a few ms against seconds of compute,
+    so the network is idle and *no* scheduler can matter — the same
+    degenerate regime ``workload.py`` normalizes out of the FB trace.
+    Scale flow sizes so the job's port-bottleneck transfer time is
+    ``ratio`` x its total compute; the lowered round *structure* and
+    relative byte proportions are untouched.
+    """
+    port_bytes: dict[tuple[str, int], float] = {}
+    for m in job.metaflows.values():
+        for f in m.flows:
+            port_bytes[("out", f.src)] = (port_bytes.get(("out", f.src), 0.0)
+                                          + f.size)
+            port_bytes[("in", f.dst)] = (port_bytes.get(("in", f.dst), 0.0)
+                                         + f.size)
+    gamma = max(port_bytes.values(), default=0.0)
+    if gamma <= 0 or job.total_load() <= 0:
+        return job
+    return job.instantiate(comm_scale=ratio * job.total_load() / gamma)
+
+
+def _fb_templates(rng: random.Random, n: int, max_span: int,
+                  target_size: float) -> list[JobTemplate]:
+    """MapReduce templates from the FB synth, comm-normalized so an
+    average job moves ~``target_size`` total (matching the training jobs'
+    scale so the mix actually contends)."""
+    out = []
+    while len(out) < n:
+        m, r, sizes = synth_fb_coflow(rng, f"fb{len(out)}")
+        if r < 2 or m + r > max_span:
+            continue
+        job = build_job(f"fb{len(out)}", m, r, sizes, "partial_order", rng,
+                        compute_ratio=1.0, compute_mode="balanced")
+        scale = target_size / max(job.total_size(), 1e-12)
+        out.append(JobTemplate(
+            name=f"fb{len(out)}",
+            dag=job.instantiate(comm_scale=scale, compute_scale=scale)))
+    return out
+
+
+# ------------------------------------------------------------- scenarios
+def scenario_dense_dp(seed: int = 0, quick: bool = False):
+    """Dense-transformer DP training: steps of an FSDP job queue up on an
+    8-port pod (ring gradient all-reduce per unit)."""
+    cfg = get_config("qwen2-7b")
+    plan = PlanAxes(dp=8)
+    step = comm_balanced(
+        dense_train_dag(cfg, LM_SHAPES["train_4k"], plan, max_units=4))
+    n_jobs = 3 if quick else 5
+    jobs = poisson_mix([JobTemplate("train", step)], n_jobs, plan.world,
+                       mean_interarrival=0.5 * step.total_load(), seed=seed)
+    return plan.world, jobs
+
+
+def scenario_moe_ep(seed: int = 0, quick: bool = False):
+    """MoE EP training: all-to-all dispatch/combine grads + split
+    dense/expert gradient sync on an 8-port pod."""
+    cfg = get_config("mixtral-8x22b")
+    plan = PlanAxes(dp=8, ep=4)
+    step = comm_balanced(
+        moe_train_dag(cfg, LM_SHAPES["train_4k"], plan, max_units=3))
+    n_jobs = 2 if quick else 4
+    jobs = poisson_mix([JobTemplate("moe", step)], n_jobs, plan.world,
+                       mean_interarrival=0.5 * step.total_load(), seed=seed)
+    return plan.world, jobs
+
+
+def scenario_pipe_serve(seed: int = 0, quick: bool = False):
+    """Pipelined serving: prefill requests stream through a 4-stage
+    pipeline; activation p2p hops are the contended metaflows."""
+    cfg = get_config("llama3-405b")
+    plan = PlanAxes(pp=4)
+    req = comm_balanced(pipeline_serve_dag(cfg, plan, n_microbatches=6,
+                                           tokens_per_mb=4096), ratio=0.8)
+    n_jobs = 4 if quick else 8
+    jobs = poisson_mix([JobTemplate("serve", req)], n_jobs, plan.world,
+                       mean_interarrival=0.4 * req.total_load(), seed=seed)
+    return plan.world, jobs
+
+
+def scenario_mixed(seed: int = 0, quick: bool = False):
+    """The mixed cluster: training + serving + MapReduce sharing one
+    24-port fabric with random placement — the scenario the paper's
+    abstraction exists for."""
+    n_ports = 24
+    train = comm_balanced(
+        dense_train_dag(get_config("qwen2-7b"), LM_SHAPES["train_4k"],
+                        PlanAxes(dp=4), max_units=4))
+    serve = comm_balanced(
+        pipeline_serve_dag(get_config("llama3-405b"), PlanAxes(pp=4),
+                           n_microbatches=4, tokens_per_mb=4096), ratio=0.8)
+    rng = random.Random(seed + 1)
+    fb = _fb_templates(rng, 2, max_span=12, target_size=train.total_size())
+    templates = [JobTemplate("train", train, weight=1.0),
+                 JobTemplate("serve", serve, weight=1.5)] + fb
+    n_jobs = 5 if quick else 10
+    jobs = poisson_mix(templates, n_jobs, n_ports,
+                       mean_interarrival=0.3 * train.total_load(), seed=seed)
+    return n_ports, jobs
+
+
+SCENARIOS = {
+    "dense_dp": scenario_dense_dp,
+    "moe_ep": scenario_moe_ep,
+    "pipe_serve": scenario_pipe_serve,
+    "mixed": scenario_mixed,
+}
+
+
+def build_scenario(name: str, seed: int = 0, quick: bool = False
+                   ) -> tuple[int, list[JobDAG]]:
+    """(n_ports, fresh jobs) for one registered scenario."""
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: "
+                       f"{sorted(SCENARIOS)}")
+    return SCENARIOS[name](seed=seed, quick=quick)

@@ -27,11 +27,32 @@ class Fabric:
             self.ingress = [1.0] * self.n_ports
         if len(self.egress) != self.n_ports or len(self.ingress) != self.n_ports:
             raise ValueError("capacity vectors must have n_ports entries")
+        # Nominal capacities, for ``restore()`` after transient stragglers.
+        self._base_egress = list(self.egress)
+        self._base_ingress = list(self.ingress)
 
     def degrade(self, port: int, factor: float) -> None:
-        """Scale a port's capacity (straggler / partial link failure)."""
+        """Scale a port's capacity (straggler / partial link failure).
+
+        ``factor`` must be positive: a zero or negative capacity would
+        deadlock the fluid simulator (flows on the port can never finish)
+        rather than model a failure.  Model a dead node by removing its
+        jobs, not by zeroing its port.
+        """
+        if not factor > 0:
+            raise ValueError(f"degrade factor must be > 0, got {factor}")
         self.egress[port] *= factor
         self.ingress[port] *= factor
+
+    def restore(self, port: int | None = None) -> None:
+        """Inverse of ``degrade``: reset a port (or, with ``None``, every
+        port) to its nominal capacity — the straggler recovered.
+        Perturbation benchmarks pair a ``degrade`` with a later
+        ``restore`` to model transient slowdowns."""
+        ports = range(self.n_ports) if port is None else (port,)
+        for p in ports:
+            self.egress[p] = self._base_egress[p]
+            self.ingress[p] = self._base_ingress[p]
 
     def residual(self) -> "Residual":
         return Residual(eg=list(self.egress), ing=list(self.ingress))

@@ -273,8 +273,48 @@ class JobDAG:
         self._mask_load = mask_load
         return masks, mask_load
 
+    # ------------------------------------------------------ template helpers
+    def instantiate(self, name: str | None = None,
+                    arrival: float | None = None,
+                    port_offset: int = 0,
+                    port_map: dict[int, int] | None = None,
+                    comm_scale: float = 1.0,
+                    compute_scale: float = 1.0) -> "JobDAG":
+        """Fresh runnable copy of this DAG treated as a template.
+
+        Simulation mutates jobs (remaining sizes, finish times), so
+        workload mixers build one template DAG and stamp out instances:
+        new flow ids, full remaining sizes, no progress.  ``port_map``
+        (exact) or ``port_offset`` (shift) relocates the job on the
+        fabric; ``comm_scale``/``compute_scale`` rescale flow sizes and
+        compute loads (matching workload regimes across job families).
+        """
+        if comm_scale < 0 or compute_scale < 0:
+            raise ValueError("scale factors must be >= 0")
+
+        def port(p: int) -> int:
+            if port_map is not None:
+                return port_map[p]
+            return p + port_offset
+
+        out = JobDAG(name=name if name is not None else self.name,
+                     arrival=self.arrival if arrival is None else arrival)
+        for t in self.tasks.values():
+            out.add_task(t.name, load=t.load * compute_scale,
+                         machine=port(t.machine) if t.machine >= 0 else -1,
+                         deps=list(t.deps))
+        for m in self.metaflows.values():
+            out.add_metaflow(m.name,
+                             flows=[(port(f.src), port(f.dst),
+                                     f.size * comm_scale) for f in m.flows],
+                             deps=list(m.deps))
+        return out
+
     def total_size(self) -> float:
         return sum(m.size for m in self.metaflows.values())
+
+    def total_load(self) -> float:
+        return sum(t.load for t in self.tasks.values())
 
     def ports_used(self) -> set[int]:
         ports: set[int] = set()

@@ -68,11 +68,15 @@ class SimResult:
 
 @dataclass
 class Perturbation:
-    """Degrade a port's capacity at a given time (straggler injection)."""
+    """Degrade a port's capacity at a given time (straggler injection).
+
+    ``factor=None`` restores the port to its nominal capacity instead
+    (``Fabric.restore``) — pair a degrade with a later restore to model a
+    transient straggler."""
 
     time: float
     port: int
-    factor: float
+    factor: float | None
 
 
 @dataclass
@@ -439,12 +443,16 @@ class Simulator:
 
             while perts and perts[0].time <= t + EPS:
                 p = perts.pop(0)
-                self.fabric.degrade(p.port, p.factor)
+                if p.factor is None:
+                    self.fabric.restore(p.port)
+                else:
+                    self.fabric.degrade(p.port, p.factor)
                 view.egress = np.asarray(self.fabric.egress, dtype=np.float64)
                 view.ingress = np.asarray(self.fabric.ingress, dtype=np.float64)
                 sched.on_perturbation(p)
                 dirty = True
-                log(f"degrade port {p.port} x{p.factor}")
+                log(f"degrade port {p.port} x{p.factor}" if p.factor
+                    is not None else f"restore port {p.port}")
 
             # ---- commit flow / metaflow completions
             newly = np.nonzero((self._rem <= EPS) & ~self._flow_done)[0]

@@ -21,7 +21,11 @@ import random
 
 from repro.core.metaflow import JobDAG
 
-# Port convention inside a job's fabric: senders 0..M-1, reducers M..M+R-1.
+# Port convention inside a job's fabric (DESIGN.md §9, shared with
+# repro.appdag): one contended port per participant, contiguous from
+# ``port_base`` — senders port_base..port_base+M-1, reducers the next R.
+# Mixers relocate whole jobs by offsetting the block
+# (``JobDAG.instantiate(port_offset=...)``).
 
 
 def _fb_width(rng: random.Random) -> tuple[int, int]:
@@ -110,7 +114,7 @@ TOPOLOGIES = ("total_order", "partial_order", "disorder")
 def build_job(name: str, n_map: int, n_red: int, sizes: list[list[float]],
               topology: str, rng: random.Random,
               compute_ratio: float = 1.0, compute_mode: str = "balanced",
-              arrival: float = 0.0) -> JobDAG:
+              arrival: float = 0.0, port_base: int = 0) -> JobDAG:
     """Build a JobDAG for one coflow under the given DAG topology.
 
     Metaflow MF_i = all flows into reducer i.  Compute task c_i always
@@ -135,8 +139,8 @@ def build_job(name: str, n_map: int, n_red: int, sizes: list[list[float]],
     job = JobDAG(name=name, arrival=arrival)
     mf_names = []
     for r in range(n_red):
-        flows = [(m, n_map + r, sizes[m][r]) for m in range(n_map)
-                 if sizes[m][r] > 0]
+        flows = [(port_base + m, port_base + n_map + r, sizes[m][r])
+                 for m in range(n_map) if sizes[m][r] > 0]
         mf = f"MF{r}"
         job.add_metaflow(mf, flows=flows)
         mf_names.append(mf)
@@ -166,7 +170,8 @@ def build_job(name: str, n_map: int, n_red: int, sizes: list[list[float]],
                 deps.append(f"c{r - po_width}")
         else:  # disorder: hard barrier on every metaflow
             deps = list(mf_names)
-        job.add_task(f"c{r}", load=load, machine=n_map + r, deps=deps)
+        job.add_task(f"c{r}", load=load, machine=port_base + n_map + r,
+                     deps=deps)
     job.validate()
     return job
 

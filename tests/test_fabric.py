@@ -1,0 +1,39 @@
+"""Fabric capacity management: degrade validation + restore inverse."""
+
+import pytest
+
+from repro.core import Fabric, JobDAG, Perturbation, make_scheduler, simulate
+
+
+def test_degrade_rejects_non_positive_factors():
+    fab = Fabric(n_ports=2)
+    for bad in (0.0, -0.5, -1):
+        with pytest.raises(ValueError, match="factor must be > 0"):
+            fab.degrade(0, bad)
+    assert fab.egress == [1.0, 1.0]         # untouched after rejection
+
+
+def test_restore_inverts_degrade():
+    fab = Fabric(n_ports=3, egress=[2.0, 4.0, 8.0], ingress=[1.0, 1.0, 3.0])
+    fab.degrade(1, 0.5)
+    fab.degrade(1, 0.5)                      # degradations compound
+    fab.degrade(2, 0.25)
+    assert fab.egress == [2.0, 1.0, 2.0]
+    fab.restore(1)
+    assert fab.egress == [2.0, 4.0, 2.0] and fab.ingress == [1.0, 1.0, 0.75]
+    fab.restore()                            # no port: restore everything
+    assert fab.egress == [2.0, 4.0, 8.0] and fab.ingress == [1.0, 1.0, 3.0]
+
+
+def test_transient_straggler_arithmetic():
+    """degrade at t=1 (x0.5), restore at t=2: a 4-unit flow on a unit port
+    transfers 1 + 0.5 by t=2 and the remaining 2.5 at full rate — finish
+    at exactly 4.5."""
+    job = JobDAG(name="j")
+    job.add_metaflow("m", flows=[(0, 1, 4.0)])
+    job.add_task("c", load=0.0, deps=["m"])
+    res = simulate([job], make_scheduler("msa"), n_ports=2,
+                   perturbations=[Perturbation(time=1.0, port=1, factor=0.5),
+                                  Perturbation(time=2.0, port=1,
+                                               factor=None)])
+    assert res.mf_finish[("j", "m")] == pytest.approx(4.5)

@@ -149,6 +149,34 @@ def test_hard_barrier_msa_equals_varys(seed):
     assert a.avg_jct == pytest.approx(b.avg_jct, rel=0.12)
 
 
+@pytest.mark.slow
+@given(kind=st.sampled_from(["all_reduce", "reduce_scatter", "all_gather",
+                             "all_to_all"]),
+       log_p=st.integers(1, 6),
+       size=st.floats(1e-6, 1e9),
+       base=st.integers(0, 1000),
+       stride=st.integers(1, 17))
+@settings(max_examples=200, deadline=None)
+def test_collective_lowering_conserves_bytes(kind, log_p, size, base, stride):
+    """appdag lowering invariant (DESIGN.md §9): for any group size the
+    ring and halving-doubling lowerings put *exactly* the same bytes on the
+    wire — 2*size*(P-1) for all-reduce, size*(P-1) otherwise — and no
+    algorithm ever emits a self-flow, on any (even non-contiguous) port
+    numbering."""
+    from repro.appdag import lower_collective
+    p = 2 ** log_p
+    ranks = tuple(base + i * stride for i in range(p))
+    expect = (2 if kind == "all_reduce" else 1) * size * (p - 1)
+    for alg in ("ring", "halving_doubling", "direct"):
+        lc = lower_collective(kind, ranks, size, alg)
+        assert lc.total_bytes == pytest.approx(expect, rel=1e-12), (kind, alg)
+        for r in lc.rounds:
+            for (s, d, z) in r:
+                assert s != d, f"self-flow on {s} ({kind}/{alg}, P={p})"
+                assert s in ranks and d in ranks
+                assert z >= 0
+
+
 @given(st.integers(0, 10_000))
 @settings(max_examples=30, deadline=None)
 def test_madd_simultaneous_finish(seed):

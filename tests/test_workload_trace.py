@@ -1,0 +1,65 @@
+"""load_fb_trace: the coflow-benchmark format parser, on an in-test fixture.
+
+Line format: ``<id> <arrival_ms> <#mappers> <mapper locs...> <#reducers>
+<reducer:MB ...>``; header ``<num_ports> <num_coflows>``; per-reducer bytes
+split evenly across mappers.
+"""
+
+import pytest
+
+from repro.core.workload import build_job, load_fb_trace
+
+FIXTURE = """\
+150 3
+1 0 2 10 20 2 5:6.0 6:2.0
+2 100 1 3 3 7:1.5 8:4.5 9:3.0
+3 250 4 1 2 3 4 1 5:8.0
+
+"""
+
+
+@pytest.fixture
+def trace_path(tmp_path):
+    p = tmp_path / "FB-fixture.txt"
+    p.write_text(FIXTURE)
+    return str(p)
+
+
+def test_parses_all_coflows_and_skips_header(trace_path):
+    coflows = load_fb_trace(trace_path)
+    assert len(coflows) == 3                 # header line is not a coflow
+    assert [(m, r) for m, r, _ in coflows] == [(2, 2), (1, 3), (4, 1)]
+
+
+def test_even_byte_split_convention(trace_path):
+    m, r, sizes = load_fb_trace(trace_path)[0]
+    # reducer 0 gets 6.0 MB split over 2 mappers, reducer 1 gets 2.0 MB
+    assert sizes == [[3.0, 1.0], [3.0, 1.0]]
+    # single-mapper job: no splitting
+    _, _, sizes1 = load_fb_trace(trace_path)[1]
+    assert sizes1 == [[1.5, 4.5, 3.0]]
+    # column sums reproduce the per-reducer MB exactly
+    _, _, sizes2 = load_fb_trace(trace_path)[2]
+    assert sum(row[0] for row in sizes2) == pytest.approx(8.0)
+
+
+def test_limit_stops_early(trace_path):
+    assert len(load_fb_trace(trace_path, limit=2)) == 2
+    assert len(load_fb_trace(trace_path, limit=None)) == 3
+
+
+def test_blank_lines_ignored(trace_path):
+    # FIXTURE ends with a blank line; the parser must not choke on it.
+    coflows = load_fb_trace(trace_path)
+    assert all(sizes for _, _, sizes in coflows)
+
+
+def test_parsed_coflows_build_jobs(trace_path):
+    import random
+    m, r, sizes = load_fb_trace(trace_path)[0]
+    job = build_job("j", m, r, sizes, "total_order", random.Random(0),
+                    port_base=5)
+    job.validate()
+    assert min(job.ports_used()) == 5        # port_base shifts the block
+    assert max(job.ports_used()) == 5 + m + r - 1
+    assert job.total_size() == pytest.approx(8.0)
