@@ -13,13 +13,19 @@ Scheduling policies resolve through the ``repro.core.sched`` registry;
 that take one, so a newly ``@register``-ed policy is benchmarkable with no
 code edits here.
 
+``--json PATH`` additionally writes the rows (and any check failures) as
+a machine-readable JSON document, so harness runs can land as points on
+the perf trajectory next to ``BENCH_sim_core.json``.
+
 Usage: python -m benchmarks.run [--quick] [--only NAME] [--policy NAME ...]
+       [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 
 from repro.core.sched import available_policies
@@ -45,10 +51,13 @@ def main() -> None:
                     choices=available_policies(), metavar="NAME",
                     help="scheduling policy to benchmark (repeatable; "
                          f"available: {', '.join(available_policies())})")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows + check failures as JSON")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     failures: list[str] = []
+    json_rows: list[dict] = []
     for name, mod in BENCHES.items():
         if args.only and name != args.only:
             continue
@@ -58,10 +67,19 @@ def main() -> None:
         rows = mod.run(**kwargs)
         for r in rows:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
+            json_rows.append({"bench": name, "name": r[0],
+                              "us_per_call": r[1], "derived": r[2]})
         errs = mod.check(rows)
         for e in errs:
             print(f"CHECK-FAIL[{name}]: {e}", file=sys.stderr)
         failures.extend(errs)
+
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"bench": "harness", "quick": args.quick,
+                       "rows": json_rows, "failures": failures},
+                      fh, indent=1, sort_keys=True)
+            fh.write("\n")
 
     if args.only is None or args.only == "roofline_table":
         print()

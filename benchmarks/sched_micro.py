@@ -39,6 +39,8 @@ def _one_call_us(n_map: int, n_red: int, sched) -> float:
     sim = Simulator(Fabric(n_ports=n_map + n_red), [job], sched)
     from repro.core.simulator import SchedView
     recs = list(sim._mfs)
+    for rec in recs:
+        rec.view_ix = rec.flow_ix   # hand-built full-table view
     view = SchedView(
         t=0.0, n_ports=sim.fabric.n_ports, src=sim._src, dst=sim._dst,
         rem=sim._rem, egress=np.asarray(sim.fabric.egress, dtype=np.float64),
@@ -49,6 +51,7 @@ def _one_call_us(n_map: int, n_red: int, sched) -> float:
     t0 = time.perf_counter()
     for _ in range(n):
         job.mark_dirty()
+        sched.on_job_arrival(job)   # invalidate versioned structure caches
         sched.schedule(view)
     return (time.perf_counter() - t0) / n * 1e6
 

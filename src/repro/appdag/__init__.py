@@ -17,13 +17,14 @@ from repro.appdag.lowering import (ALGORITHMS, COLLECTIVES,
                                    LoweredCollective, add_lowered,
                                    lower_collective, lower_grouped)
 from repro.appdag.mixer import (SCENARIOS, JobTemplate, build_scenario,
-                                poisson_mix)
+                                mixed_templates, poisson_mix)
 from repro.appdag.plans import (PlanAxes, dense_train_dag, moe_train_dag,
                                 n_units, pipeline_serve_dag, unit_grad_bytes)
 
 __all__ = [
     "ALGORITHMS", "COLLECTIVES", "JobTemplate", "LoweredCollective",
     "PlanAxes", "SCENARIOS", "add_lowered", "build_scenario",
-    "dense_train_dag", "lower_collective", "lower_grouped", "moe_train_dag",
-    "n_units", "pipeline_serve_dag", "poisson_mix", "unit_grad_bytes",
+    "dense_train_dag", "lower_collective", "lower_grouped",
+    "mixed_templates", "moe_train_dag", "n_units", "pipeline_serve_dag",
+    "poisson_mix", "unit_grad_bytes",
 ]

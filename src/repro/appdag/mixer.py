@@ -149,11 +149,12 @@ def scenario_pipe_serve(seed: int = 0, quick: bool = False):
     return plan.world, jobs
 
 
-def scenario_mixed(seed: int = 0, quick: bool = False):
-    """The mixed cluster: training + serving + MapReduce sharing one
-    24-port fabric with random placement — the scenario the paper's
-    abstraction exists for."""
-    n_ports = 24
+def mixed_templates(seed: int = 0) -> list[JobTemplate]:
+    """The mixed-cluster species list — dense-DP training, pipelined
+    serving, and two comm-normalized MapReduce templates.  Shared by
+    ``scenario_mixed`` and the simulator-core scaling benchmark
+    (``benchmarks/perf_sim_core.py``), which stamps out hundreds to
+    thousands of arrivals from the same species on a larger fabric."""
     train = comm_balanced(
         dense_train_dag(get_config("qwen2-7b"), LM_SHAPES["train_4k"],
                         PlanAxes(dp=4), max_units=4))
@@ -162,8 +163,17 @@ def scenario_mixed(seed: int = 0, quick: bool = False):
                            n_microbatches=4, tokens_per_mb=4096), ratio=0.8)
     rng = random.Random(seed + 1)
     fb = _fb_templates(rng, 2, max_span=12, target_size=train.total_size())
-    templates = [JobTemplate("train", train, weight=1.0),
-                 JobTemplate("serve", serve, weight=1.5)] + fb
+    return [JobTemplate("train", train, weight=1.0),
+            JobTemplate("serve", serve, weight=1.5)] + fb
+
+
+def scenario_mixed(seed: int = 0, quick: bool = False):
+    """The mixed cluster: training + serving + MapReduce sharing one
+    24-port fabric with random placement — the scenario the paper's
+    abstraction exists for."""
+    n_ports = 24
+    templates = mixed_templates(seed)
+    train = templates[0].dag
     n_jobs = 5 if quick else 10
     jobs = poisson_mix(templates, n_jobs, n_ports,
                        mean_interarrival=0.3 * train.total_load(), seed=seed)

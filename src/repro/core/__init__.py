@@ -12,12 +12,14 @@ from repro.core.sched import (CriticalPathScheduler, Decision, FairScheduler,
                               FifoScheduler, MSAScheduler, Scheduler,
                               VarysScheduler, available_policies,
                               make_scheduler, metaflow_priorities, register)
+from repro.core.simref import ReferenceSimulator, simulate_reference
 from repro.core.simulator import Perturbation, SimResult, Simulator, simulate
 
 __all__ = [
     "ComputeTask", "CriticalPathScheduler", "Decision", "Fabric",
     "FairScheduler", "FifoScheduler", "Flow", "JobDAG", "MSAScheduler",
-    "Metaflow", "Perturbation", "Scheduler", "SimResult", "Simulator",
-    "VarysScheduler", "available_policies", "figure1_jobs", "figure2_job",
-    "make_scheduler", "metaflow_priorities", "register", "simulate",
+    "Metaflow", "Perturbation", "ReferenceSimulator", "Scheduler",
+    "SimResult", "Simulator", "VarysScheduler", "available_policies",
+    "figure1_jobs", "figure2_job", "make_scheduler", "metaflow_priorities",
+    "register", "simulate", "simulate_reference",
 ]

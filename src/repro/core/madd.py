@@ -12,7 +12,13 @@ could use; MADD is the minimal allocation achieving the bottleneck time.
 
 The paper's MSA adopts MADD verbatim for the per-metaflow bandwidth
 assignment step (Algorithm 1, line 11).
-"""
+
+This module is the *object-level reference implementation* (readable
+``Flow``/``Residual`` arithmetic).  The simulator's hot path runs the
+array forms on the compacted view instead — ``SchedView.madd`` (with a
+scalar small-group variant) in ``core/simulator.py``, DESIGN.md §10 —
+and tests/test_sim_core_equiv.py cross-checks both against this one on
+randomized groups."""
 
 from __future__ import annotations
 

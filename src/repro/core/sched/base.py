@@ -31,7 +31,11 @@ The API mirrors this split:
 ``Decision`` carries the dense per-flow rate vector *plus* the explicit
 metaflow priority order, so downstream consumers (``comm_schedule``'s
 bucket planner, benchmarks, the timeline) read the order directly instead
-of reverse-engineering it from finish timestamps.
+of reverse-engineering it from finish timestamps.  The rate vector is
+dense over the *view's flow arrays* (``SchedView.src/dst/rem``): in the
+compacted simulator those hold only the flows of active metaflows, and
+each active record's ``view_ix`` gives its indices into them — policies
+address flows exclusively through ``view_ix``, never ``flow_ix``.
 
 See DESIGN.md ("The scheduling-policy contract") for the full contract.
 """
@@ -42,6 +46,8 @@ import abc
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.core.metaflow import EPS
 
 
 @dataclass
@@ -113,17 +119,65 @@ class Scheduler(abc.ABC):
 
     # ------------------------------------------------- shared rate helper
     @staticmethod
-    def ordered_rates(view, groups) -> np.ndarray:
-        """MADD each flow-index group in priority order on the residual
-        capacities, then work-conserving backfill — the bandwidth
-        assignment shared by every ordered policy (paper Algorithm 1 step
-        3 and Varys' MADD)."""
+    def ordered_rates(view, groups, owners=None) -> np.ndarray:
+        """MADD each flow-index group (``view_ix`` arrays) in priority
+        order on the residual capacities, then work-conserving backfill —
+        the bandwidth assignment shared by every ordered policy (paper
+        Algorithm 1 step 3 and Varys' MADD).
+
+        ``owners`` aligns with ``groups``: the ActiveMF record (or list of
+        records, for coflow groups) owning each group.  When given, the
+        walk keeps bitmasks of exhausted ports and skips any group whose
+        live-port mask intersects them with one integer AND — exactly the
+        groups whose MADD would return without granting (it refuses when
+        any required port is exhausted, and residuals only shrink during
+        the walk), so the skip is bit-exact while capping the expensive
+        MADD calls at O(ports) per decision however long the priority
+        list is."""
         rates = np.zeros_like(view.rem)
         res_eg = view.egress.copy()
         res_in = view.ingress.copy()
-        for ix in groups:
-            view.madd(ix, res_eg, res_in, rates)
-        if groups:
+        if view.legacy_walk:
+            # Frozen pre-ISSUE-3 walk (reference-simulator baseline).
+            for ix in groups:
+                view.madd_legacy(ix, res_eg, res_in, rates)
+            if groups:
+                view.backfill_legacy(np.concatenate(groups), res_eg,
+                                     res_in, rates)
+            return rates
+        if owners is None:
+            for ix in groups:
+                view.madd(ix, res_eg, res_in, rates)
+        else:
+            ex_out, ex_in = view.exhausted_masks(res_eg, res_in)
+            masks_of = view.port_masks
+            for ix, owner in zip(groups, owners):
+                if type(owner) is list:
+                    pm_out = pm_in = 0
+                    for rec in owner:
+                        o = rec.pm_out
+                        if o is None:
+                            o, i = masks_of(rec)
+                        else:
+                            i = rec.pm_in
+                        pm_out |= o
+                        pm_in |= i
+                else:
+                    pm_out = owner.pm_out
+                    if pm_out is None:
+                        pm_out, pm_in = masks_of(owner)
+                    else:
+                        pm_in = owner.pm_in
+                if (pm_out & ex_out) or (pm_in & ex_in):
+                    continue          # some required port is exhausted
+                sat_out, sat_in = view.madd(ix, res_eg, res_in, rates)
+                ex_out |= sat_out
+                ex_in |= sat_in
+        # Backfill needs residual on both ends of some pair; when every
+        # egress (or every ingress) port is exhausted no flow can receive
+        # a grant, so the whole sweep (and its concatenate) is skipped —
+        # exact, and the common case under a deep backlog.
+        if groups and (res_eg > EPS).any() and (res_in > EPS).any():
             ordered = np.concatenate(groups)
             view.backfill(ordered, res_eg, res_in, rates)
         return rates

@@ -29,18 +29,19 @@ from repro.core.sched.registry import register
 
 
 def _per_job_structure(view) -> tuple[list[tuple[str, np.ndarray]],
-                                      dict[str, list[str]]]:
+                                      dict[str, list]]:
     """Per job with active metaflows: (job_name, concatenated flow
-    indices) groups plus the job's active metaflow names in activation
-    order — everything the coflow policies derive from the active set."""
+    indices) groups plus the job's active records in activation order —
+    everything the coflow policies derive from the active set (the
+    records feed the walk's port-mask skip and the order expansion)."""
     ix_of: dict[str, list[np.ndarray]] = {}
-    names_of: dict[str, list[str]] = {}
+    recs_of: dict[str, list] = {}
     for rec in view.active:
-        ix_of.setdefault(rec.job.name, []).append(rec.flow_ix)
-        names_of.setdefault(rec.job.name, []).append(rec.name)
+        ix_of.setdefault(rec.job.name, []).append(rec.view_ix)
+        recs_of.setdefault(rec.job.name, []).append(rec)
     groups = [(name, np.concatenate(chunks))
               for name, chunks in ix_of.items()]
-    return groups, names_of
+    return groups, recs_of
 
 
 class _CoflowScheduler(Scheduler):
@@ -56,13 +57,14 @@ class _CoflowScheduler(Scheduler):
         raise NotImplementedError
 
     def _decide(self, view) -> Decision:
-        groups, names_of = self._structure
+        groups, recs_of = self._structure
         ordered = self._ordered(view, groups)
-        rates = self.ordered_rates(view, [ix for _, ix in ordered])
+        rates = self.ordered_rates(view, [ix for _, ix in ordered],
+                                   [recs_of[name] for name, _ in ordered])
         # A coflow covers all of its job's active metaflows equally; expand
         # the job order into (job, metaflow) pairs in activation order.
-        order = tuple((name, mf) for name, _ in ordered
-                      for mf in names_of[name])
+        order = tuple((name, rec.name) for name, _ in ordered
+                      for rec in recs_of[name]) if view.want_order else ()
         return Decision(rates=rates, order=order)
 
     def schedule(self, view) -> Decision:
@@ -77,11 +79,31 @@ class _CoflowScheduler(Scheduler):
 
 @register("varys")
 class VarysScheduler(_CoflowScheduler):
-    """Smallest-Effective-Bottleneck-First over coflows, MADD rates."""
+    """Smallest-Effective-Bottleneck-First over coflows, MADD rates.
+
+    The SEBF key memoizes in the view's per-job scratch: a coflow's
+    effective bottleneck only moves when the job's bytes (or the port
+    capacities) do, and the simulator invalidates exactly then — cache
+    hits return the identical float, so the order is unchanged."""
 
     def _ordered(self, view, groups):
-        return sorted(groups,
-                      key=lambda kv: (view.bottleneck_time(kv[1]), kv[0]))
+        scratch = view.job_scratch
+        if scratch is None:
+            return sorted(groups,
+                          key=lambda kv: (view.bottleneck_time(kv[1]), kv[0]))
+        keyed = []
+        for group in groups:
+            name, ix = group
+            d = scratch.get(name)
+            if d is None:
+                d = scratch[name] = {}
+            b = d.get("sebf")
+            if b is None:
+                b = view.bottleneck_time(ix)
+                d["sebf"] = b
+            keyed.append(((b, name), group))
+        keyed.sort()
+        return [g for _, g in keyed]
 
 
 @register("fifo")
@@ -108,7 +130,7 @@ class FairScheduler(Scheduler):
         return True
 
     def schedule(self, view) -> Decision:
-        all_ix = np.concatenate([rec.flow_ix for rec in view.active])
+        all_ix = np.concatenate([rec.view_ix for rec in view.active])
         all_ix = all_ix[view.rem[all_ix] > EPS]
         rates = np.zeros_like(view.rem)
         if all_ix.size == 0:

@@ -73,19 +73,31 @@ class CriticalPathScheduler(Scheduler):
         return self._structure[job.name]
 
     def _critical_paths(self, view) -> dict[str, dict[str, float]]:
-        """Per job: remaining critical path *through* every node."""
-        recs_of = {name: {r.name: r for r in recs}
-                   for name, recs in view.mf_records.items()}
+        """Per job: remaining critical path *through* every node.
+
+        Memoized in the view's per-job scratch: a job's paths only move
+        when its bytes drain, its compute advances, or capacities change
+        — the simulator invalidates the scratch on exactly those events,
+        so hits return the identical floats."""
+        scratch = view.job_scratch
         out: dict[str, dict[str, float]] = {}
         jobs_seen = {rec.job.name: rec.job for rec in view.active}
         for jname, job in jobs_seen.items():
+            if scratch is not None:
+                d = scratch.get(jname)
+                if d is None:
+                    d = scratch[jname] = {}
+                cp = d.get("cpath")
+                if cp is not None:
+                    out[jname] = cp
+                    continue
             children, topo = self._job_structure(job)
-            by_name = recs_of[jname]
-            cp: dict[str, float] = {}
+            by_name = {r.name: r for r in view.mf_records[jname]}
+            cp = {}
             for n in topo:          # reverse topological: children first
                 node = job.node(n)
                 if isinstance(node, Metaflow):
-                    cost = view.bottleneck_time(by_name[n].flow_ix)
+                    cost = view.bottleneck_of(by_name[n])
                 else:
                     cost = max(node.remaining, 0.0) if not node.done else 0.0
                 down = 0.0
@@ -93,6 +105,8 @@ class CriticalPathScheduler(Scheduler):
                     if cp[c] > down:
                         down = cp[c]
                 cp[n] = cost + down
+            if scratch is not None:
+                d["cpath"] = cp
             out[jname] = cp
         return out
 
@@ -101,8 +115,10 @@ class CriticalPathScheduler(Scheduler):
         keyed = sorted(view.active,
                        key=lambda rec: (-cp[rec.job.name][rec.name],
                                         rec.job.name, rec.name))
-        rates = self.ordered_rates(view, [rec.flow_ix for rec in keyed])
-        order = tuple((rec.job.name, rec.name) for rec in keyed)
+        rates = self.ordered_rates(view, [rec.view_ix for rec in keyed],
+                                   keyed)
+        order = tuple(rec.pair or (rec.job.name, rec.name)
+                      for rec in keyed) if view.want_order else ()
         return Decision(rates=rates, order=order)
 
     def schedule(self, view) -> Decision:

@@ -17,11 +17,17 @@ simulator, compute finishes, since those can activate metaflows):
 
 Decision-caching split (see sched/base.py): the *classification* —
 direct/indirect, gain numerators, consumer requirement masks — only
-changes when a DAG node finishes or a job arrives, so ``schedule()``
-caches it and ``refresh()`` recomputes just the remaining-bytes-dependent
-keys (gains, attributes) and the rate assignment.  The key arithmetic in
-both paths is expression-for-expression identical, so cached runs are
-bit-exact against full recomputation.
+changes when a DAG node finishes or a job arrives, so it is cached per
+record behind a per-job version counter (a node finishing in one job
+cannot reclassify another job's metaflows) and ``schedule()`` ==
+``refresh()`` by construction.  Keys (gains, attributes) are
+remaining-bytes-dependent and recomputed per decision, but memoize
+against the view's cross-event caches: a record's sort key is reused
+verbatim while the object identities of its memoized remaining-sum and
+attribute map hold, which the simulator guarantees implies the inputs
+are unchanged — so cached runs are bit-exact against full
+recomputation (pinned in tests/test_sched_api.py, and old-vs-new in
+tests/test_sim_core_equiv.py).
 
 Gain-numerator ambiguity (documented in DESIGN.md §8): the paper's Figure-2
 prose sums ``load_c2 + load_c4`` for MF2 although c4 also consumes MF4.  We
@@ -63,32 +69,6 @@ class MetaflowPriority:
         if self.direct:
             return (0, -self.gain, self.job, self.name)
         return (1, self.attribute, self.job, self.name)
-
-
-def _indirect_attr(job_name: str, cmasks: list[int],
-                   bit_rem: dict[int, float],
-                   attr_cache: dict[tuple[str, int], float],
-                   rem: float) -> float:
-    """Indirect attribute: nearest consumer's outstanding metaflow bytes.
-
-    Shared by the full and cached priority paths — the caching contract
-    (refresh bit-identical to schedule) hangs on both paths running this
-    exact float arithmetic, so there is deliberately one copy."""
-    attr = float("inf")
-    for mask in cmasks:
-        key = (job_name, mask)
-        if key not in attr_cache:
-            total, mm, b = 0.0, mask, 0
-            while mm:
-                if mm & 1:
-                    total += bit_rem[b]
-                mm >>= 1
-                b += 1
-            attr_cache[key] = total
-        attr = min(attr, attr_cache[key])
-    if attr == float("inf"):
-        attr = rem
-    return attr
 
 
 def _descendant_closure(job: JobDAG, roots: list[str]) -> set[str]:
@@ -157,95 +137,178 @@ class MSAScheduler(Scheduler):
     """Paper Algorithm 1 + backfill on the simulator's vectorized view.
 
     The priority logic is the bitmask fast path of
-    :func:`metaflow_priorities`; the cached structure maps each active
+    :func:`metaflow_priorities`.  The cached structure maps each active
     metaflow ordinal to either ``("D", load)`` (direct, gain numerator) or
-    ``("I", [mask, ...])`` (indirect, per-consumer requirement bitmasks).
-    """
+    ``("I", [mask, ...])`` (indirect, per-consumer requirement bitmasks),
+    held *per job* behind a version counter bumped by the lifecycle hooks:
+    a node finishing in one job cannot change another job's
+    classification, so a structural event only rebuilds the entries of
+    the jobs it touched.  Keys (gains, attributes) are recomputed from
+    live remaining bytes on every decision, full or refresh — the key
+    arithmetic is expression-for-expression the same on both paths, so
+    cached runs stay bit-exact against full recomputation (asserted by
+    tests/test_sched_api.py)."""
 
     def __init__(self, gain_mode: str = "unlockable") -> None:
         if gain_mode not in ("unlockable", "descendants"):
             raise ValueError(f"unknown gain_mode {gain_mode!r}")
         self.gain_mode = gain_mode
-        self._structure: dict[int, tuple] | None = None
+        self._job_ver: dict[str, int] = {}
+        self._last_order: list = []
 
-    # ---------------------------------------------------------- full path
-    def _full_priorities(self, view) -> tuple[list, dict[int, tuple]]:
-        keyed = []
-        structure: dict[int, tuple] = {}
-        bit_rem_cache: dict[str, dict[int, float]] = {}
-        attr_cache: dict[tuple[str, int], float] = {}
-        for rec in view.active:
-            job = rec.job
-            masks, mask_load = job.mf_masks()
-            bit = 1 << job.mf_bit(rec.name)
-            rem = max(view.mf_remaining(rec), EPS)
-            consumers = [c for c in job.consumers(rec.name)
-                         if not job.tasks[c].done]
-            direct = any(masks[c] == bit for c in consumers)
-            if direct:
-                if self.gain_mode == "unlockable":
-                    load = mask_load.get(bit, 0.0)
-                else:  # 'descendants' — literal Fig-2 arithmetic (reference)
-                    roots = [c for c in consumers if masks[c] == bit]
-                    names = set(roots) | _descendant_closure(job, roots)
-                    load = sum(job.tasks[n].load for n in names)
-                structure[rec.ordinal] = ("D", load)
-                keyed.append(((0, -load / rem, job.name, rec.name), rec))
-            else:
-                if job.name not in bit_rem_cache:
-                    bit_rem_cache[job.name] = view.job_bit_remaining(job)
-                bit_rem = bit_rem_cache[job.name]
-                cmasks = [masks[c] for c in consumers]
-                structure[rec.ordinal] = ("I", cmasks)
-                attr = _indirect_attr(job.name, cmasks, bit_rem,
-                                      attr_cache, rem)
-                keyed.append(((1, attr, job.name, rec.name), rec))
-        keyed.sort(key=lambda kr: kr[0])
-        return keyed, structure
+    # ------------------------------------------------------------ lifecycle
+    def attach(self, fabric, jobs) -> None:
+        self._job_ver = {}
+        self._last_order = []
 
+    def _bump(self, job) -> bool:
+        self._job_ver[job.name] = self._job_ver.get(job.name, 0) + 1
+        return True
+
+    def on_job_arrival(self, job) -> bool:
+        return self._bump(job)
+
+    def on_node_finish(self, job, name: str) -> bool:
+        return self._bump(job)
+
+    # ----------------------------------------------------------- structure
+    def _ent(self, rec) -> tuple:
+        """Versioned classification entry for one active record, cached on
+        the record itself against its job's version counter plus the
+        scheduler identity (two MSA instances — e.g. different gain
+        modes — must not reuse each other's entries)."""
+        job = rec.job
+        ver = self._job_ver.get(job.name, 0)
+        cached = rec.msa_ent
+        if cached is not None and cached[0] is self and cached[1] == ver:
+            return cached[2]
+        masks, mask_load = job.mf_masks()
+        bit = 1 << job.mf_bit(rec.name)
+        consumers = [c for c in job.consumers(rec.name)
+                     if not job.tasks[c].done]
+        if any(masks[c] == bit for c in consumers):
+            if self.gain_mode == "unlockable":
+                load = mask_load.get(bit, 0.0)
+            else:  # 'descendants' — literal Fig-2 arithmetic (reference)
+                roots = [c for c in consumers if masks[c] == bit]
+                names = set(roots) | _descendant_closure(job, roots)
+                load = sum(job.tasks[n].load for n in names)
+            ent = ("D", load)
+        else:
+            ent = ("I", [masks[c] for c in consumers])
+        rec.msa_ent = (self, ver, ent)
+        return ent
+
+    # ---------------------------------------------------------------- keys
     def _priorities(self, view) -> list[tuple[tuple, object]]:
-        """Full keyed priority list (cross-checked by the property test)."""
-        keyed, _ = self._full_priorities(view)
-        return keyed
+        """Keyed priority list for the active set (cross-checked against
+        the frozenset reference by the property test).  The rank element
+        realizes the (job.name, metaflow name) tiebreak without string
+        compares (hand-built views without ranks fall back to the name
+        pair).  Indirect attributes memoize per (job, mask) in the view's
+        cross-event cache — a job's attributes only move when its bytes
+        do, and the simulator invalidates exactly then.
 
-    # -------------------------------------------------------- cached path
-    def _cached_priorities(self, view) -> list | None:
-        structure = self._structure
+        Two O(changed)-per-decision devices (results provably unchanged):
+        a record's key is reused verbatim while its job version and the
+        *object identities* of its memoized remaining-float and attr map
+        hold (those objects are replaced exactly when the underlying
+        bytes move, so identity implies the recomputed key would be
+        bit-equal); and records are visited in the previous decision's
+        sorted order (stale dropped, activations appended), which makes
+        the final Timsort near-linear — sorted output is independent of
+        visit order since keys are unique."""
+        job_ver = self._job_ver
+        rem_cache = view.mf_rem_cache
+        rem_of = view.mf_remaining
+        attr_root = view.attr_cache if view.attr_cache is not None else {}
+        bit_rems: dict[str, dict[int, float]] = {}
+        active = view.active
+        ranked = bool(active) and active[0].rank >= 0
+        # Visit order: last sorted order, minus finished, plus activations.
+        prev = self._last_order
+        if prev:
+            order = [rec for rec in prev if rec.view_ix is not None]
+            order += [rec for rec in active if rec.msa_key is None]
+            if len(order) != len(active):     # drifted (hand-built view)
+                order = active
+        else:
+            order = active
         keyed = []
-        bit_rem_cache: dict[str, dict[int, float]] = {}
-        attr_cache: dict[tuple[str, int], float] = {}
-        for rec in view.active:
-            ent = structure.get(rec.ordinal)
-            if ent is None:          # active set drifted — shouldn't happen
-                return None
+        for rec in order:
             job = rec.job
-            rem = max(view.mf_remaining(rec), EPS)
-            if ent[0] == "D":
-                keyed.append(((0, -ent[1] / rem, job.name, rec.name), rec))
+            ver = job_ver.get(job.name, 0)
+            rem_obj = rem_cache.get(rec.ordinal) if rem_cache is not None \
+                else None
+            ck = rec.msa_key
+            if (ck is not None and ck[0] is self and ck[1] == ver
+                    and rem_obj is not None and ck[2] is rem_obj
+                    and (ck[3] is None
+                         or ck[3] is attr_root.get(job.name))):
+                keyed.append((ck[4], rec))
+                continue
+            cached = rec.msa_ent
+            if cached is not None and cached[0] is self and cached[1] == ver:
+                ent = cached[2]
             else:
-                if job.name not in bit_rem_cache:
-                    bit_rem_cache[job.name] = view.job_bit_remaining(job)
-                attr = _indirect_attr(job.name, ent[1],
-                                      bit_rem_cache[job.name], attr_cache, rem)
-                keyed.append(((1, attr, job.name, rec.name), rec))
-        keyed.sort(key=lambda kr: kr[0])
+                ent = self._ent(rec)
+            rem = rem_of(rec) if rem_obj is None else rem_obj
+            if rem < EPS:
+                rem = EPS
+            amap = None
+            if ent[0] == "D":
+                val = -ent[1] / rem
+                cls = 0
+            else:
+                jname = job.name
+                amap = attr_root.get(jname)
+                if amap is None:
+                    amap = attr_root[jname] = {}
+                attr = float("inf")
+                for mask in ent[1]:
+                    a = amap.get(mask)
+                    if a is None:
+                        bit_rem = bit_rems.get(jname)
+                        if bit_rem is None:
+                            bit_rem = bit_rems[jname] = \
+                                view.job_bit_remaining(job)
+                        total, mm, b = 0.0, mask, 0
+                        while mm:
+                            if mm & 1:
+                                total += bit_rem[b]
+                            mm >>= 1
+                            b += 1
+                        amap[mask] = a = total
+                    if a < attr:
+                        attr = a
+                val = rem if attr == float("inf") else attr
+                cls = 1
+            if ranked:
+                key = (cls, val, rec.rank)
+            else:
+                key = (cls, val, job.name, rec.name)
+            if rem_cache is not None and rem_obj is None:
+                rem_obj = rem_cache.get(rec.ordinal)   # seeded by rem_of
+            rec.msa_key = (self, ver, rem_obj, amap, key)
+            keyed.append((key, rec))
+        keyed.sort()
+        self._last_order = [rec for _, rec in keyed]
         return keyed
 
     # ------------------------------------------------------------- decide
     def _decide(self, view, keyed) -> Decision:
-        groups = [rec.flow_ix for _, rec in keyed]
-        rates = self.ordered_rates(view, groups)
-        order = tuple((rec.job.name, rec.name) for _, rec in keyed)
+        groups = [rec.view_ix for _, rec in keyed]
+        owners = [rec for _, rec in keyed]
+        rates = self.ordered_rates(view, groups, owners)
+        order = tuple(rec.pair or (rec.job.name, rec.name)
+                      for _, rec in keyed) if view.want_order else ()
         return Decision(rates=rates, order=order)
 
     def schedule(self, view) -> Decision:
-        keyed, self._structure = self._full_priorities(view)
-        return self._decide(view, keyed)
+        return self._decide(view, self._priorities(view))
 
     def refresh(self, view, prev: Decision) -> Decision:
-        if self._structure is None:
-            return self.schedule(view)
-        keyed = self._cached_priorities(view)
-        if keyed is None:
-            return self.schedule(view)
-        return self._decide(view, keyed)
+        # Same computation: keys are live on both paths and the structure
+        # cache is already event-versioned, so refresh == schedule by
+        # construction (the contract's bit-exactness, trivially).
+        return self._decide(view, self._priorities(view))

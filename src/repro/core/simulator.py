@@ -21,15 +21,29 @@ two paths are bit-identical by the policy contract, so caching never
 changes results (``cache_decisions=False`` forces the full path every
 event and is asserted equivalent in tests).
 
-Implementation notes (perf): flows live in flat numpy arrays (src / dst /
-remaining) grouped by metaflow; policies receive a ``SchedView`` that is
-built once per run and updated incrementally — jobs and metaflow records
-enter at admission and leave at retirement, capacities refresh only on
-perturbations — so per-event work is O(changed), not O(jobs × metaflows).
-DAG bookkeeping (runnable frontier, unfinished-metaflow requirement
-bitmasks) is likewise incremental, recomputed only when a node finishes.
-This keeps wide Facebook-trace jobs (hundreds of reducers, thousands of
-flows) tractable in pure Python.
+Implementation notes (perf — the compacted core, DESIGN.md §10): per-event
+work is O(active flows), never O(total flows).  The event loop maintains
+*compacted* flow arrays (src / dst / remaining / owning-metaflow) holding
+exactly the flows of currently-active metaflows, rebuilt only on
+activation / finish events (which already force a full ``schedule()``, so
+decision caching and compaction invalidate together).  Policies see the
+compacted arrays through the ``SchedView``; each active record carries
+``view_ix``, its indices into them, and ``Decision.rates`` is dense over
+the same compacted universe.  Inactive metaflows never enter the arrays:
+their remaining bytes are frozen scalars (flows only drain while active)
+and their per-port demands are cached on first use, so MSA attribute sums
+and critical-path bottlenecks cost O(1) per inactive metaflow.  The
+next-event horizon is computed analytically per metaflow group
+(``np.minimum.reduceat`` over the group slices — under MADD all flows of
+a metaflow finish together, so a whole group retires in one batched event
+rather than F flow events).  The per-flow Python backfill loop is replaced
+by an exact dedupe: only the first live flow per (src, dst) port pair can
+receive a backfill grant (the grant zeroes the smaller of the two
+residuals), so the sequential sweep runs over distinct port pairs, not
+flows.  The port-capacity invariant check is debug-only
+(``debug_checks=True``).  ``repro.core.simref`` keeps the pre-compaction
+core verbatim as the equivalence and perf baseline; results are
+bit-identical (asserted exactly in tests/test_sim_core_equiv.py).
 """
 
 from __future__ import annotations
@@ -87,21 +101,59 @@ class ActiveMF:
     mf: Metaflow
     name: str
     ordinal: int          # global metaflow index
-    flow_ix: np.ndarray   # indices into the flow table
+    flow_ix: np.ndarray   # indices into the simulator's full flow table
+    bit: int = -1         # job-local metaflow bit (JobDAG.mf_bit)
+    # Global deterministic tiebreak: the record's position in the sorted
+    # (job.name, metaflow name) order — comparing ranks is exactly
+    # comparing the name pair, without per-decision string compares.
+    rank: int = -1
+    pair: tuple[str, str] | None = None   # (job.name, name), for Decision.order
+    # Per-record policy scratch: MSA's (scheduler, job_version,
+    # classification) entry and its (scheduler, version, rem_obj,
+    # attr_map_obj, key) cached sort key — the identity of the memoized
+    # floats/dicts proves the inputs unchanged, and the scheduler
+    # identity keeps two MSA instances (e.g. different gain modes) from
+    # reusing each other's entries.
+    msa_ent: tuple | None = None
+    msa_key: tuple | None = None
+    # Indices of this record's flows in the SchedView's flow arrays.  Set
+    # by the owner of the view: the compacted simulator assigns compact
+    # slots while the metaflow is active (None when inactive); full-table
+    # contexts (the reference simulator, hand-built views in tests and
+    # microbenchmarks) set ``view_ix = flow_ix``.
+    view_ix: np.ndarray | None = None
+    # Live-port bitmasks (ports used by flows with remaining > EPS), cached
+    # by SchedView.port_masks and invalidated by the simulator whenever one
+    # of this record's flows completes.
+    pm_out: int | None = None
+    pm_in: int | None = None
 
 
 @dataclass
 class SchedView:
     """Everything a rate-assignment policy may look at for one round.
 
-    Owned by the simulator and updated incrementally: the flow arrays are
-    the live simulation state, ``jobs``/``mf_records`` track admissions and
+    Owned by the simulator and updated incrementally.  ``src``/``dst``/
+    ``rem`` are the view's *flow arrays*: in the compacted simulator they
+    hold exactly the flows of active metaflows (record ``view_ix`` indexes
+    into them); the reference simulator and hand-built views use the full
+    flow table with ``view_ix = flow_ix``.  ``Decision.rates`` is dense
+    over the same arrays.  ``jobs``/``mf_records`` track admissions and
     retirements, ``active`` changes only on activation/finish events, and
-    the capacity vectors refresh on perturbations."""
+    the capacity vectors refresh on perturbations.
+
+    Inactive metaflows (present in ``mf_records`` but not ``active``) are
+    served from O(1) caches instead of the flow arrays: ``mf_rem_frozen``
+    holds their remaining bytes (flows only drain while active, so the
+    value is the initial size until activation and 0.0 after finish) and
+    ``inactive_dems`` lazily yields their per-port demand vectors for
+    ``bottleneck_of``.  Both are None in hand-built full-table views,
+    which fall back to indexing the arrays with ``flow_ix``.
+    """
 
     t: float
     n_ports: int
-    src: np.ndarray        # int32 [F]
+    src: np.ndarray        # int32 [F] — view flow arrays (see above)
     dst: np.ndarray        # int32 [F]
     rem: np.ndarray        # float64 [F] — remaining bytes per flow
     egress: np.ndarray     # float64 [P] — full port capacities
@@ -109,24 +161,233 @@ class SchedView:
     active: list[ActiveMF]
     jobs: list[JobDAG]     # live (arrived, unfinished) jobs
     mf_records: dict[str, list[ActiveMF]]  # live job name -> ALL its records
+    mf_rem_frozen: np.ndarray | None = None   # float64 [n_mfs], by ordinal
+    inactive_dems: object | None = None       # ordinal -> (dem_out, dem_in)
+    # Cross-event memoization, owned and invalidated by the compacted
+    # simulator: per-ordinal remaining sums and per-job bit-remaining
+    # dicts stay valid until one of the job's flows actually drains (an
+    # event only drains *flowing* metaflows — the blocked backlog keeps
+    # its sums).  The cached floats are the exact slice sums, so hits are
+    # bit-identical to recomputation.  None in hand-built views.
+    mf_rem_cache: dict[int, float] | None = None
+    bitrem_cache: dict[str, dict[int, float]] | None = None
+    # Per-job MSA attribute memo (mask -> summed remaining), invalidated
+    # together with bitrem_cache — attributes only move when the job's
+    # remaining bytes do.
+    attr_cache: dict[str, dict[int, float]] | None = None
+    # Per-job policy scratch for capacity-dependent keys (Varys' SEBF
+    # bottleneck, cpath's critical paths): invalidated like bitrem_cache
+    # PLUS whenever the job's compute advances, and cleared wholesale on
+    # perturbations (capacities enter these keys).
+    job_scratch: dict[str, dict] | None = None
+    # False when the owning simulator won't read Decision.order this
+    # round (no unserved metaflow) — policies may then skip building it.
+    want_order: bool = True
+    # True on reference-simulator views: Scheduler.ordered_rates then runs
+    # the frozen pre-compaction walk (madd_legacy on every group, the
+    # per-flow backfill_legacy sweep) so the perf baseline measures the
+    # old primitives, not this PR's.
+    legacy_walk: bool = False
 
     def mf_remaining(self, a: ActiveMF) -> float:
+        if a.view_ix is not None:
+            c = self.mf_rem_cache
+            if c is None:
+                return float(self.rem[a.view_ix].sum())
+            v = c.get(a.ordinal)
+            if v is None:
+                v = float(self.rem[a.view_ix].sum())
+                c[a.ordinal] = v
+            return v
+        if self.mf_rem_frozen is not None:
+            return float(self.mf_rem_frozen[a.ordinal])
         return float(self.rem[a.flow_ix].sum())
 
     def job_bit_remaining(self, job: JobDAG) -> dict[int, float]:
         """Remaining bytes per metaflow *bit* for one job (active or not) —
-        the quantities MSA's indirect attributes sum over."""
-        out: dict[int, float] = {}
+        the quantities MSA's indirect attributes sum over.  Callers must
+        treat the dict as read-only (it may be a shared cache entry)."""
+        c = self.bitrem_cache
+        if c is not None:
+            out = c.get(job.name)
+            if out is not None:
+                return out
+        out = {}
         for rec in self.mf_records[job.name]:
-            out[job.mf_bit(rec.name)] = float(self.rem[rec.flow_ix].sum())
+            bit = rec.bit if rec.bit >= 0 else job.mf_bit(rec.name)
+            out[bit] = self.mf_remaining(rec)
+        if c is not None:
+            c[job.name] = out
         return out
 
     # ---------------------------------------------------- shared primitives
+    def port_masks(self, rec: ActiveMF) -> tuple[int, int]:
+        """(egress, ingress) bitmasks of the ports used by the record's
+        *live* flows.  Cached on the record; the owning simulator clears
+        the cache whenever one of the record's flows completes (the only
+        event that shrinks the live set)."""
+        pm = rec.pm_out
+        if pm is None:
+            ix = rec.view_ix
+            live = self.rem[ix] > EPS
+            pm = pi = 0
+            for p in np.unique(self.src[ix[live]]).tolist():
+                pm |= 1 << p
+            for p in np.unique(self.dst[ix[live]]).tolist():
+                pi |= 1 << p
+            rec.pm_out = pm
+            rec.pm_in = pi
+        return pm, rec.pm_in
+
+    @staticmethod
+    def exhausted_masks(res_eg: np.ndarray, res_in: np.ndarray
+                        ) -> tuple[int, int]:
+        """Bitmasks of ports with no residual capacity (walk entry state)."""
+        ex_out = ex_in = 0
+        for p in np.nonzero(res_eg <= EPS)[0].tolist():
+            ex_out |= 1 << p
+        for p in np.nonzero(res_in <= EPS)[0].tolist():
+            ex_in |= 1 << p
+        return ex_out, ex_in
+
     def madd(self, flow_ix: np.ndarray, res_eg: np.ndarray,
-             res_in: np.ndarray, rates: np.ndarray) -> None:
+             res_in: np.ndarray, rates: np.ndarray) -> tuple[int, int]:
         """Vectorized MADD on residual capacity; writes into ``rates`` and
         deducts from the residual vectors in place.  No-op when any required
-        port is exhausted (the metaflow waits; backfill may still run)."""
+        port is exhausted (the metaflow waits; backfill may still run).
+        ``flow_ix`` indexes the view's flow arrays (``view_ix`` space).
+        Returns bitmasks of the ports the grant newly exhausted, so walk
+        loops can maintain their exhausted-port state incrementally.
+
+        Small groups (most metaflows — collective rounds, narrow
+        shuffles) take a scalar path: ~25 numpy calls of fixed overhead
+        cost more than the arithmetic for a handful of flows.  The scalar
+        path accumulates per-port sums in the same flow order as
+        ``bincount``, so every float result is bit-identical."""
+        n = flow_ix.size
+        if n == 0:
+            return 0, 0
+        if n <= 16:
+            return self._madd_small(flow_ix, res_eg, res_in, rates)
+        # Contiguous groups (every single-metaflow group is) read the
+        # arrays through views instead of fancy-gather copies.
+        i0 = int(flow_ix[0])
+        i1 = int(flow_ix[n - 1])
+        contig = i1 - i0 + 1 == n
+        rem = self.rem[i0:i1 + 1] if contig else self.rem[flow_ix]
+        live = rem > EPS
+        n_live = int(live.sum())
+        if n_live == 0:
+            return 0, 0
+        if n_live == n:
+            ix = flow_ix
+            s = self.src[i0:i1 + 1] if contig else self.src[flow_ix]
+            d = self.dst[i0:i1 + 1] if contig else self.dst[flow_ix]
+        else:
+            ix = flow_ix[live]
+            rem = rem[live]
+            s = self.src[ix]
+            d = self.dst[ix]
+        dem_out = np.bincount(s, weights=rem, minlength=self.n_ports)
+        dem_in = np.bincount(d, weights=rem, minlength=self.n_ports)
+        used_out = dem_out > 0
+        used_in = dem_in > 0
+        if (res_eg[used_out] <= EPS).any() or (res_in[used_in] <= EPS).any():
+            return 0, 0
+        gamma = max(
+            (dem_out[used_out] / res_eg[used_out]).max(initial=0.0),
+            (dem_in[used_in] / res_in[used_in]).max(initial=0.0))
+        if gamma <= EPS:
+            return 0, 0
+        r = rem / gamma
+        if contig and n_live == n:
+            rates[i0:i1 + 1] += r
+        else:
+            rates[ix] += r
+        res_eg -= np.bincount(s, weights=r, minlength=self.n_ports)
+        res_in -= np.bincount(d, weights=r, minlength=self.n_ports)
+        np.clip(res_eg, 0.0, None, out=res_eg)
+        np.clip(res_in, 0.0, None, out=res_in)
+        sat_out = sat_in = 0
+        for p in np.nonzero(used_out & (res_eg <= EPS))[0].tolist():
+            sat_out |= 1 << p
+        for p in np.nonzero(used_in & (res_in <= EPS))[0].tolist():
+            sat_in |= 1 << p
+        return sat_out, sat_in
+
+    def _madd_small(self, flow_ix: np.ndarray, res_eg: np.ndarray,
+                    res_in: np.ndarray, rates: np.ndarray) -> tuple[int, int]:
+        """Scalar MADD for small groups — bit-identical to the vectorized
+        path (per-port accumulation in flow order == bincount; x-0 and
+        single-element clips are exact)."""
+        ix_l = flow_ix.tolist()
+        rem_l = self.rem[flow_ix].tolist()
+        src_l = self.src[flow_ix].tolist()
+        dst_l = self.dst[flow_ix].tolist()
+        dem_out: dict[int, float] = {}
+        dem_in: dict[int, float] = {}
+        live: list[int] = []
+        for k, r in enumerate(rem_l):
+            if r > EPS:
+                live.append(k)
+                p = src_l[k]
+                dem_out[p] = dem_out.get(p, 0.0) + r
+                q = dst_l[k]
+                dem_in[q] = dem_in.get(q, 0.0) + r
+        if not live:
+            return 0, 0
+        gamma = 0.0
+        for p, dem in dem_out.items():
+            cap = res_eg[p]
+            if cap <= EPS:
+                return 0, 0
+            g = dem / cap
+            if g > gamma:
+                gamma = g
+        for q, dem in dem_in.items():
+            cap = res_in[q]
+            if cap <= EPS:
+                return 0, 0
+            g = dem / cap
+            if g > gamma:
+                gamma = g
+        if gamma <= EPS:
+            return 0, 0
+        grant_out: dict[int, float] = {}
+        grant_in: dict[int, float] = {}
+        for k in live:
+            rr = rem_l[k] / gamma
+            rates[ix_l[k]] += rr
+            p = src_l[k]
+            grant_out[p] = grant_out.get(p, 0.0) + rr
+            q = dst_l[k]
+            grant_in[q] = grant_in.get(q, 0.0) + rr
+        sat_out = sat_in = 0
+        for p, g in grant_out.items():
+            v = res_eg[p] - g
+            if v < 0.0:
+                v = 0.0
+            res_eg[p] = v
+            if v <= EPS:
+                sat_out |= 1 << p
+        for q, g in grant_in.items():
+            v = res_in[q] - g
+            if v < 0.0:
+                v = 0.0
+            res_in[q] = v
+            if v <= EPS:
+                sat_in |= 1 << q
+        return sat_out, sat_in
+
+    # ------------------------------------------------ frozen old primitives
+    # Verbatim pre-ISSUE-3 implementations, used only when
+    # ``legacy_walk`` is set (reference-simulator views): the perf
+    # baseline must pay the old costs — full MADD on every group and the
+    # O(flows) per-flow backfill sweep.  Results are identical to the
+    # fast paths (asserted by tests/test_sim_core_equiv.py).
+
+    def madd_legacy(self, flow_ix: np.ndarray, res_eg: np.ndarray,
+                    res_in: np.ndarray, rates: np.ndarray) -> None:
         rem = self.rem[flow_ix]
         live = rem > EPS
         if not live.any():
@@ -153,14 +414,12 @@ class SchedView:
         np.clip(res_eg, 0.0, None, out=res_eg)
         np.clip(res_in, 0.0, None, out=res_in)
 
-    def backfill(self, ordered_ix: np.ndarray, res_eg: np.ndarray,
-                 res_in: np.ndarray, rates: np.ndarray) -> None:
-        """Work-conserving backfill in priority order (sequential by
-        definition — each grant changes the residual seen by later flows)."""
+    def backfill_legacy(self, ordered_ix: np.ndarray, res_eg: np.ndarray,
+                        res_in: np.ndarray, rates: np.ndarray) -> None:
         rem = self.rem
         src = self.src
         dst = self.dst
-        eg = res_eg  # local aliases; mutate in place
+        eg = res_eg
         ing = res_in
         for i in ordered_ix:
             if rem[i] <= EPS:
@@ -174,8 +433,43 @@ class SchedView:
                 eg[src[i]] -= h
                 ing[dst[i]] -= h
 
+    def backfill(self, ordered_ix: np.ndarray, res_eg: np.ndarray,
+                 res_in: np.ndarray, rates: np.ndarray) -> None:
+        """Work-conserving backfill in priority order.
+
+        Exact vectorized form of the sequential per-flow sweep: a grant
+        ``h = min(eg[s], ing[d])`` zeroes the smaller residual, so any
+        later flow on the same (s, d) pair sees ``min = 0`` and can never
+        receive a grant (residuals only shrink).  Only the *first* live
+        flow per port pair is therefore a candidate; the sequential loop
+        runs over those representatives — O(distinct port pairs), not
+        O(flows)."""
+        if ordered_ix.size == 0:
+            return
+        rem = self.rem
+        src = self.src
+        dst = self.dst
+        live = ordered_ix[rem[ordered_ix] > EPS]
+        if live.size == 0:
+            return
+        pair = src[live].astype(np.int64) * np.int64(self.n_ports) + dst[live]
+        _, first = np.unique(pair, return_index=True)
+        reps = live[np.sort(first)]
+        eg = res_eg  # local aliases; mutate in place
+        ing = res_in
+        for i in reps:
+            h = eg[src[i]]
+            hi = ing[dst[i]]
+            if hi < h:
+                h = hi
+            if h > EPS:
+                rates[i] += h
+                eg[src[i]] -= h
+                ing[dst[i]] -= h
+
     def bottleneck_time(self, flow_ix: np.ndarray) -> float:
-        """Varys' effective bottleneck on full port capacities (SEBF key)."""
+        """Varys' effective bottleneck on full port capacities (SEBF key).
+        ``flow_ix`` indexes the view's flow arrays."""
         rem = self.rem[flow_ix]
         live = rem > EPS
         if not live.any():
@@ -184,10 +478,30 @@ class SchedView:
         rem = rem[live]
         dem_out = np.bincount(self.src[ix], weights=rem, minlength=self.n_ports)
         dem_in = np.bincount(self.dst[ix], weights=rem, minlength=self.n_ports)
-        with np.errstate(divide="ignore"):
+        return self._bottleneck_from_dems(dem_out, dem_in)
+
+    def _bottleneck_from_dems(self, dem_out: np.ndarray,
+                              dem_in: np.ndarray) -> float:
+        with np.errstate(divide="ignore", invalid="ignore"):
             g_out = np.where(dem_out > 0, dem_out / self.egress, 0.0)
             g_in = np.where(dem_in > 0, dem_in / self.ingress, 0.0)
         return float(max(g_out.max(initial=0.0), g_in.max(initial=0.0)))
+
+    def bottleneck_of(self, rec: ActiveMF) -> float:
+        """Effective bottleneck for any record, active or not.  Inactive
+        metaflows resolve from the frozen per-ordinal caches (their flows
+        are untouched until activation and zero after finish)."""
+        if rec.view_ix is not None:
+            return self.bottleneck_time(rec.view_ix)
+        if self.mf_rem_frozen is not None:
+            if self.mf_rem_frozen[rec.ordinal] == 0.0:
+                return 0.0
+            if self.inactive_dems is not None:
+                dem_out, dem_in = self.inactive_dems(rec.ordinal)
+                if dem_out is None:
+                    return 0.0
+                return self._bottleneck_from_dems(dem_out, dem_in)
+        return self.bottleneck_time(rec.flow_ix)
 
 
 class Simulator:
@@ -196,7 +510,8 @@ class Simulator:
                  perturbations: list[Perturbation] | None = None,
                  record_timeline: bool = False,
                  max_events: int = 5_000_000,
-                 cache_decisions: bool = True) -> None:
+                 cache_decisions: bool = True,
+                 debug_checks: bool = False) -> None:
         for j in jobs:
             j.validate()
         names = [j.name for j in jobs]
@@ -210,6 +525,7 @@ class Simulator:
         self.record_timeline = record_timeline
         self.max_events = max_events
         self.cache_decisions = cache_decisions
+        self.debug_checks = debug_checks
         self._build_tables()
         scheduler.attach(fabric, self.jobs)
 
@@ -236,10 +552,15 @@ class Simulator:
                     rem.append(f.remaining)
                 ix = np.arange(start, len(src), dtype=np.int64)
                 rec = ActiveMF(job=j, mf=mf, name=name,
-                               ordinal=len(self._mfs), flow_ix=ix)
+                               ordinal=len(self._mfs), flow_ix=ix,
+                               bit=j.mf_bit(name), pair=(j.name, name))
                 self._mfs.append(rec)
                 self._mf_of_job[j.name].append(rec.ordinal)
                 self._mf_ord[(j.name, name)] = rec.ordinal
+        for r, o in enumerate(sorted(range(len(self._mfs)),
+                                     key=lambda o: (self._mfs[o].job.name,
+                                                    self._mfs[o].name))):
+            self._mfs[o].rank = r
         self._src = np.asarray(src, dtype=np.int32)
         self._dst = np.asarray(dst, dtype=np.int32)
         self._rem = np.asarray(rem, dtype=np.float64)
@@ -250,12 +571,41 @@ class Simulator:
         self._flow_mf = np.empty(len(src), dtype=np.int64)
         for m in self._mfs:
             self._flow_mf[m.flow_ix] = m.ordinal
+        # Frozen remaining bytes per metaflow ordinal: exact while the
+        # metaflow is inactive (flows only drain while active); 0.0 once
+        # finished.  Same float arithmetic as a full-table slice sum.
+        self._mf_frozen = np.array([self._rem[m.flow_ix].sum()
+                                    for m in self._mfs], dtype=np.float64)
+        self._dems_cache: dict[int, tuple] = {}
+
+    def _inactive_dems(self, ordinal: int):
+        """(dem_out, dem_in) dense per-port demand vectors of an inactive,
+        unfinished metaflow — computed once (the flows are untouched until
+        activation, and the cache is never read after finish)."""
+        hit = self._dems_cache.get(ordinal)
+        if hit is None:
+            ix = self._mfs[ordinal].flow_ix
+            rem = self._rem[ix]
+            live = rem > EPS
+            if not live.any():
+                hit = (None, None)
+            else:
+                ix = ix[live]
+                rem = rem[live]
+                hit = (np.bincount(self._src[ix], weights=rem,
+                                   minlength=self.fabric.n_ports),
+                       np.bincount(self._dst[ix], weights=rem,
+                                   minlength=self.fabric.n_ports))
+            self._dems_cache[ordinal] = hit
+        return hit
 
     # ------------------------------------------------------------------ run
     def run(self) -> SimResult:
         t = 0.0
-        pending = list(self.jobs)
-        perts = list(self.perturbations)
+        jobs_by_arrival = self.jobs
+        next_arrival = 0                       # admission cursor (sorted)
+        all_perts = self.perturbations
+        next_pert = 0                          # perturbation cursor (sorted)
         timeline: list[tuple[float, str]] = []
         mf_finish: dict[tuple[str, str], float] = {}
         task_finish: dict[tuple[str, str], float] = {}
@@ -264,6 +614,7 @@ class Simulator:
         sched = self.scheduler
 
         live_jobs: list[JobDAG] = []
+        done_jobs: list[JobDAG] = []           # retire at end of the event
         running: list[tuple[JobDAG, ComputeTask]] = []
         active: dict[int, ActiveMF] = {}       # ordinal -> record
         # Incremental DAG frontier state, built per job at arrival.
@@ -272,21 +623,45 @@ class Simulator:
         unfinished_nodes: dict[str, int] = {}
 
         # Decision cache + incremental policy view.  The `active` dict is
-        # the single source of truth for the active set; `view.active` is
-        # re-derived from it (insertion-ordered) only when it changed, and
-        # the `allowed` flow mask is updated at the same two sites.
+        # the single source of truth for the active set; the compacted
+        # arrays (and `view.active`) are re-derived from it only when it
+        # changed — exactly the events that also dirty every decision
+        # cache, so a cached Decision never outlives its compact layout.
         dirty = True
-        active_changed = False
+        compact_stale = False
+        compact_added: list[ActiveMF] = []  # activations since last rebuild
+        compact_removed: list[tuple[int, int]] = []  # dropped (start, size)
         decision = None
         sched_full = 0
         sched_refresh = 0
-        allowed = np.zeros(len(self._rem), dtype=bool)
+        mf_rem_cache: dict[int, float] = {}
+        bitrem_cache: dict[str, dict[int, float]] = {}
+        attr_cache: dict[str, dict[int, float]] = {}
+        job_scratch: dict[str, dict] = {}
+
+        def invalidate_job(jname: str) -> None:
+            bitrem_cache.pop(jname, None)
+            attr_cache.pop(jname, None)
+            job_scratch.pop(jname, None)
+        # Compacted active-flow state: one slot per flow of an active
+        # metaflow, grouped contiguously per metaflow in activation order.
+        c_src = np.empty(0, dtype=np.int32)
+        c_dst = np.empty(0, dtype=np.int32)
+        c_rem = np.empty(0, dtype=np.float64)
+        c_mf = np.empty(0, dtype=np.int64)     # owning ordinal per slot
+        c_glob = np.empty(0, dtype=np.int64)   # global flow index per slot
+        c_done = np.empty(0, dtype=bool)
+        c_starts = np.empty(0, dtype=np.int64)  # group starts (reduceat)
         view = SchedView(
             t=0.0, n_ports=self.fabric.n_ports,
-            src=self._src, dst=self._dst, rem=self._rem,
+            src=c_src, dst=c_dst, rem=c_rem,
             egress=np.asarray(self.fabric.egress, dtype=np.float64),
             ingress=np.asarray(self.fabric.ingress, dtype=np.float64),
-            active=[], jobs=live_jobs, mf_records={})
+            active=[], jobs=live_jobs, mf_records={},
+            mf_rem_frozen=self._mf_frozen,
+            inactive_dems=self._inactive_dems,
+            mf_rem_cache=mf_rem_cache, bitrem_cache=bitrem_cache,
+            attr_cache=attr_cache, job_scratch=job_scratch)
         # First-service bookkeeping for SimResult.mf_service_order.
         unserved: set[int] = set()
         service_order: list[tuple[str, str]] = []
@@ -295,6 +670,94 @@ class Simulator:
             if self.record_timeline:
                 timeline.append((t, msg))
 
+        def rebuild_compact() -> None:
+            """Re-derive the compacted arrays from the active set — called
+            only when it changed (activation / metaflow finish), which is
+            O(active flows) amortized over structural events.  Surviving
+            groups carry their drained values over (one boolean
+            compression of the old arrays, in order — the active dict
+            preserves layout order); the full table is re-synced at the
+            same time so it stays canonical.  Pure activations take an
+            append-only fast path: the previous layout is a prefix of the
+            new one, so the new groups land in one concatenate."""
+            nonlocal c_src, c_dst, c_rem, c_mf, c_glob, c_done, c_starts
+            if not compact_removed and compact_added:
+                offset = c_rem.size
+                glob_new = [rec.flow_ix for rec in compact_added]
+                starts_new = np.empty(len(compact_added), dtype=np.int64)
+                for k, rec in enumerate(compact_added):
+                    m = rec.flow_ix.size
+                    starts_new[k] = offset
+                    rec.view_ix = np.arange(offset, offset + m,
+                                            dtype=np.int64)
+                    offset += m
+                glob_cat = np.concatenate(glob_new)
+                c_rem = np.concatenate([c_rem, self._rem[glob_cat]])
+                c_glob = np.concatenate([c_glob, glob_cat])
+                c_mf = np.concatenate(
+                    [c_mf, np.repeat([rec.ordinal for rec in compact_added],
+                                     [g.size for g in glob_new])])
+                c_src = np.concatenate([c_src, self._src[glob_cat]])
+                c_dst = np.concatenate([c_dst, self._dst[glob_cat]])
+                c_done = np.concatenate([c_done, self._flow_done[glob_cat]])
+                c_starts = np.concatenate([c_starts, starts_new])
+                view.src = c_src
+                view.dst = c_dst
+                view.rem = c_rem
+                view.active = view.active + compact_added
+                compact_added.clear()
+                return
+            compact_added.clear()
+            recs = list(active.values())
+            n_surv = len(recs) - sum(1 for r in recs if r.view_ix is None)
+            # Compress the survivors out of the old layout in one pass.
+            if compact_removed:
+                keep = np.ones(c_rem.size, dtype=bool)
+                for s, m in compact_removed:
+                    keep[s:s + m] = False
+                compact_removed.clear()
+                old_rem = c_rem[keep]
+                old_glob = c_glob[keep]
+                self._rem[old_glob] = old_rem      # re-sync full table
+            else:
+                old_rem = c_rem
+                old_glob = c_glob
+            if recs:
+                sizes = np.fromiter((rec.flow_ix.size for rec in recs),
+                                    dtype=np.int64, count=len(recs))
+                c_starts = np.zeros(len(recs), dtype=np.int64)
+                np.cumsum(sizes[:-1], out=c_starts[1:])
+                if n_surv < len(recs):
+                    glob_new = np.concatenate(
+                        [rec.flow_ix for rec in recs[n_surv:]])
+                    c_rem = np.concatenate([old_rem, self._rem[glob_new]])
+                    c_glob = np.concatenate([old_glob, glob_new])
+                else:
+                    c_rem = old_rem
+                    c_glob = old_glob
+                c_mf = np.repeat(
+                    np.fromiter((rec.ordinal for rec in recs),
+                                dtype=np.int64, count=len(recs)), sizes)
+                c_src = self._src[c_glob]
+                c_dst = self._dst[c_glob]
+                c_done = self._flow_done[c_glob].copy()
+                master = np.arange(c_rem.size, dtype=np.int64)
+                for k, rec in enumerate(recs):
+                    s = c_starts[k]
+                    rec.view_ix = master[s:s + sizes[k]]
+            else:
+                c_rem = np.empty(0, dtype=np.float64)
+                c_glob = np.empty(0, dtype=np.int64)
+                c_mf = np.empty(0, dtype=np.int64)
+                c_src = np.empty(0, dtype=np.int32)
+                c_dst = np.empty(0, dtype=np.int32)
+                c_done = np.empty(0, dtype=bool)
+                c_starts = np.empty(0, dtype=np.int64)
+            view.src = c_src
+            view.dst = c_dst
+            view.rem = c_rem
+            view.active = recs
+
         def node_finished(job: JobDAG, name: str) -> None:
             """Cascade a node completion through the frontier."""
             nonlocal dirty
@@ -302,13 +765,15 @@ class Simulator:
             if sched.on_node_finish(job, name):
                 dirty = True
             unfinished_nodes[job.name] -= 1
+            if unfinished_nodes[job.name] == 0:
+                done_jobs.append(job)
             for child in children[job.name].get(name, ()):  # noqa: B023
                 pending_deps[job.name][child] -= 1
                 if pending_deps[job.name][child] == 0:
                     activate(job, child)
 
         def activate(job: JobDAG, name: str) -> None:
-            nonlocal dirty, active_changed
+            nonlocal dirty, compact_stale
             node = job.node(name)
             if isinstance(node, ComputeTask):
                 node.start_time = t
@@ -320,22 +785,36 @@ class Simulator:
                     finish_metaflow(rec)
                 else:
                     active[rec.ordinal] = rec
-                    allowed[rec.flow_ix] = True
                     unserved.add(rec.ordinal)
+                    compact_added.append(rec)
+                    invalidate_job(job.name)
                     dirty = True
-                    active_changed = True
+                    compact_stale = True
                     log(f"activate {job.name}/{name}")
 
         def finish_metaflow(rec: ActiveMF) -> None:
-            nonlocal dirty, active_changed
+            nonlocal dirty, compact_stale
             rec.mf.finish_time = t
             for f in rec.mf.flows:
                 f.remaining = 0.0
+            # Zero the table slice too: flows finish with sub-EPS residues
+            # which would otherwise pollute later mf_remaining /
+            # job_bit_remaining attribute sums (the frozen value guards the
+            # compacted view; the table write keeps the two consistent).
+            self._rem[rec.flow_ix] = 0.0
+            self._mf_frozen[rec.ordinal] = 0.0
+            mf_rem_cache.pop(rec.ordinal, None)
+            invalidate_job(rec.job.name)
             mf_finish[(rec.job.name, rec.name)] = t
             last_flow[rec.job.name] = t
             if active.pop(rec.ordinal, None) is not None:
-                allowed[rec.flow_ix] = False
-                active_changed = True
+                compact_stale = True
+                if rec.view_ix is not None:
+                    compact_removed.append((int(rec.view_ix[0]),
+                                            rec.view_ix.size))
+                else:               # activated and finished between rebuilds
+                    compact_added.remove(rec)
+            rec.view_ix = None
             unserved.discard(rec.ordinal)
             dirty = True
             log(f"finish {rec.job.name}/{rec.name}")
@@ -344,8 +823,10 @@ class Simulator:
         def record_service(decision, rates) -> None:
             """First time a metaflow transfers, append it to the service
             order — priority-ordered within a single decision."""
-            newly = [o for o in unserved
-                     if float(rates[self._mfs[o].flow_ix].sum()) > EPS]
+            served = np.unique(c_mf[rates > 0.0])
+            newly = [o for o in served.tolist()
+                     if o in unserved
+                     and float(rates[self._mfs[o].view_ix].sum()) > EPS]
             if not newly:
                 return
             pos = {key: i for i, key in enumerate(decision.order)}
@@ -376,6 +857,8 @@ class Simulator:
             children[job.name] = ch
             pending_deps[job.name] = pend
             unfinished_nodes[job.name] = n_nodes
+            if n_nodes == 0:          # degenerate empty job: retire this event
+                done_jobs.append(job)
             log(f"arrive {job.name}")
             # Snapshot the dep-free roots before activating: activating a
             # zero-size metaflow cascades node_finished into this same
@@ -384,20 +867,23 @@ class Simulator:
             for name in [n for n, k in pend.items() if k == 0]:
                 activate(job, name)
 
-        while pending or live_jobs:
+        while next_arrival < len(jobs_by_arrival) or live_jobs:
             events += 1
             if events > self.max_events:
                 raise RuntimeError("simulator exceeded max_events — livelock?")
 
-            while pending and pending[0].arrival <= t + EPS:
-                admit(pending.pop(0))
+            while (next_arrival < len(jobs_by_arrival)
+                   and jobs_by_arrival[next_arrival].arrival <= t + EPS):
+                admit(jobs_by_arrival[next_arrival])
+                next_arrival += 1
 
             # ---- rates from the policy under test
             view.t = t
-            if active_changed:
-                view.active = list(active.values())
-                active_changed = False
+            if compact_stale:
+                rebuild_compact()
+                compact_stale = False
             if view.active:
+                view.want_order = bool(unserved)
                 if dirty or decision is None or not self.cache_decisions:
                     decision = sched.schedule(view)
                     sched_full += 1
@@ -405,25 +891,31 @@ class Simulator:
                 else:
                     decision = sched.refresh(view, decision)
                     sched_refresh += 1
-                # Only active metaflows may transfer, whatever the policy says.
-                rates = np.where(allowed, decision.rates, 0.0)
-                self._check_capacity(rates, view)
+                rates = decision.rates
+                if self.debug_checks:
+                    self._check_capacity(rates, c_src, c_dst, view)
                 if unserved:
                     record_service(decision, rates)
             else:
-                rates = np.zeros_like(self._rem)
+                rates = np.empty(0, dtype=np.float64)
 
-            # ---- next event horizon
+            # ---- next event horizon, per metaflow group (batched: under
+            # MADD every flow of a group finishes at the group's horizon,
+            # so the whole group retires in the same event)
             dt = float("inf")
-            flowing = (rates > EPS) & (self._rem > EPS)
-            if flowing.any():
-                dt = float((self._rem[flowing] / rates[flowing]).min())
+            flowing = (rates > EPS) & (c_rem > EPS)
+            any_flowing = bool(flowing.any())
+            if any_flowing:
+                ttf = np.full(c_rem.size, np.inf)
+                ttf[flowing] = c_rem[flowing] / rates[flowing]
+                group_horizon = np.minimum.reduceat(ttf, c_starts)
+                dt = float(group_horizon.min())
             for _, task in running:
                 dt = min(dt, task.remaining / self.machine_speed)
-            if pending:
-                dt = min(dt, pending[0].arrival - t)
-            if perts:
-                dt = min(dt, perts[0].time - t)
+            if next_arrival < len(jobs_by_arrival):
+                dt = min(dt, jobs_by_arrival[next_arrival].arrival - t)
+            if next_pert < len(all_perts):
+                dt = min(dt, all_perts[next_pert].time - t)
 
             if dt == float("inf"):
                 blocked = [j.name for j in live_jobs]
@@ -433,40 +925,53 @@ class Simulator:
 
             # ---- advance the fluid state
             t += dt
-            if flowing.any():
-                self._rem[flowing] -= rates[flowing] * dt
-                np.clip(self._rem, 0.0, None, out=self._rem)
+            if any_flowing:
+                c_rem[flowing] -= rates[flowing] * dt
+                np.clip(c_rem, 0.0, None, out=c_rem)
+                # Drained metaflows: drop their memoized remaining sums
+                # (everything blocked keeps its cache across the event).
+                for o in np.unique(c_mf[flowing]).tolist():
+                    mf_rem_cache.pop(o, None)
+                    invalidate_job(self._mfs[o].job.name)
             if running:
-                for _, task in running:
+                for job, task in running:
                     task.remaining = max(0.0, task.remaining
                                          - self.machine_speed * dt)
+                    # Compute-dependent scratch (cpath keys) went stale.
+                    job_scratch.pop(job.name, None)
 
-            while perts and perts[0].time <= t + EPS:
-                p = perts.pop(0)
+            while (next_pert < len(all_perts)
+                   and all_perts[next_pert].time <= t + EPS):
+                p = all_perts[next_pert]
+                next_pert += 1
                 if p.factor is None:
                     self.fabric.restore(p.port)
                 else:
                     self.fabric.degrade(p.port, p.factor)
                 view.egress = np.asarray(self.fabric.egress, dtype=np.float64)
                 view.ingress = np.asarray(self.fabric.ingress, dtype=np.float64)
+                job_scratch.clear()     # capacity-dependent keys everywhere
                 sched.on_perturbation(p)
                 dirty = True
                 log(f"degrade port {p.port} x{p.factor}" if p.factor
                     is not None else f"restore port {p.port}")
 
-            # ---- commit flow / metaflow completions
-            newly = np.nonzero((self._rem <= EPS) & ~self._flow_done)[0]
-            if newly.size:
-                self._flow_done[newly] = True
-                for ordinal, cnt in zip(*np.unique(self._flow_mf[newly],
-                                                   return_counts=True)):
-                    self._mf_live[ordinal] -= cnt
-                    rec = self._mfs[ordinal]
-                    last_flow[rec.job.name] = t
-                    if self._mf_live[ordinal] == 0 and ordinal in active:
-                        finish_metaflow(rec)
-                    elif sched.on_flow_finish(rec.job, rec.name):
-                        dirty = True
+            # ---- commit flow / metaflow completions (per-group batches)
+            if c_rem.size:
+                newly = np.nonzero((c_rem <= EPS) & ~c_done)[0]
+                if newly.size:
+                    c_done[newly] = True
+                    self._flow_done[c_glob[newly]] = True
+                    for ordinal, cnt in zip(*np.unique(c_mf[newly],
+                                                       return_counts=True)):
+                        self._mf_live[ordinal] -= cnt
+                        rec = self._mfs[ordinal]
+                        rec.pm_out = rec.pm_in = None   # live-port set shrank
+                        last_flow[rec.job.name] = t
+                        if self._mf_live[ordinal] == 0 and ordinal in active:
+                            finish_metaflow(rec)
+                        elif sched.on_flow_finish(rec.job, rec.name):
+                            dirty = True
 
             # ---- commit compute completions
             if running:
@@ -481,13 +986,18 @@ class Simulator:
                         still.append((job, task))
                 running[:] = still
 
-            # ---- retire finished jobs
-            if any(unfinished_nodes[j.name] == 0 for j in live_jobs):
-                for j in [j for j in live_jobs if unfinished_nodes[j.name] == 0]:
+            # ---- retire finished jobs (collected by node_finished)
+            if done_jobs:
+                for j in done_jobs:
                     j.finish_time = t
-                    live_jobs.remove(j)
+                    for k, x in enumerate(live_jobs):
+                        if x is j:
+                            del live_jobs[k]
+                            break
                     del view.mf_records[j.name]
+                    invalidate_job(j.name)
                     log(f"done {j.name}")
+                done_jobs.clear()
 
         jct = {j.name: (j.finish_time or 0.0) - j.arrival for j in self.jobs}
         cct = {j.name: last_flow.get(j.name, j.arrival) - j.arrival
@@ -498,10 +1008,14 @@ class Simulator:
                          sched_refresh=sched_refresh,
                          mf_service_order=service_order)
 
-    def _check_capacity(self, rates: np.ndarray, view: SchedView) -> None:
-        """Invariant: the policy never oversubscribes a port."""
-        out = np.bincount(self._src, weights=rates, minlength=view.n_ports)
-        inn = np.bincount(self._dst, weights=rates, minlength=view.n_ports)
+    @staticmethod
+    def _check_capacity(rates: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                        view: SchedView) -> None:
+        """Invariant: the policy never oversubscribes a port.  Debug-only
+        (``debug_checks=True``): two O(flows) bincounts per event, which the
+        compacted hot path exists to avoid."""
+        out = np.bincount(src, weights=rates, minlength=view.n_ports)
+        inn = np.bincount(dst, weights=rates, minlength=view.n_ports)
         if (out > view.egress + 1e-6).any() or (inn > view.ingress + 1e-6).any():
             bad = np.nonzero((out > view.egress + 1e-6)
                              | (inn > view.ingress + 1e-6))[0]

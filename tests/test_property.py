@@ -93,8 +93,10 @@ def test_fast_priorities_match_reference(job, rnd):
             src.append(f.src)
             dst.append(f.dst)
             rem.append(f.remaining)
+        ix = np.arange(start, len(src))
+        # Hand-built full-table view: view_ix == flow_ix (see SchedView).
         recs.append(ActiveMF(job=job, mf=m, name=m.name, ordinal=len(recs),
-                             flow_ix=np.arange(start, len(src))))
+                             flow_ix=ix, view_ix=ix))
     by_name = {r.name: r for r in recs}
     view = SchedView(
         t=0.0, n_ports=max(max(src, default=0), max(dst, default=0)) + 1,

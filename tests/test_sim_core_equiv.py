@@ -1,0 +1,240 @@
+"""Compacted core == frozen pre-compaction core, plus its regressions.
+
+The compacted simulator (active-set arrays, analytic per-group horizons,
+dedupe backfill, frozen inactive sums — DESIGN.md §10) must reproduce the
+old core *identically*: same JCT, same CCT, same realized service order,
+on randomized multi-job workloads, for every registered policy.  The old
+core is kept verbatim in ``repro.core.simref`` for exactly this purpose.
+
+Also here: the residual-bytes leak regression (``finish_metaflow`` now
+zeroes the flow-table slice), the degrade→restore decision-cache
+invalidation pair, and the ``debug_checks`` capacity-invariant flag.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (Fabric, JobDAG, Perturbation, ReferenceSimulator,
+                        Scheduler, Simulator, make_scheduler, simulate,
+                        simulate_reference)
+from repro.core.sched.base import Decision
+from repro.core.workload import build_job, synth_fb_coflow
+
+ALL_POLICIES = ("msa", "varys", "fifo", "fair", "cpath")
+
+
+def _random_batch(n_jobs: int = 50, seed: int = 11, n_ports: int = 32
+                  ) -> tuple[int, list[JobDAG]]:
+    """Randomized shared-fabric workload: FB-shaped coflows across all
+    three DAG topologies, random contiguous placement, staggered
+    arrivals — enough contention that priorities, backfill and the
+    blocked backlog are all exercised."""
+    rng = random.Random(seed)
+    topos = ("total_order", "partial_order", "disorder")
+    jobs: list[JobDAG] = []
+    arrival = 0.0
+    while len(jobs) < n_jobs:
+        m, r, sizes = synth_fb_coflow(rng, "")
+        if r < 2 or m + r > n_ports // 2:
+            continue
+        base = rng.randrange(0, n_ports - (m + r) + 1)
+        jobs.append(build_job(f"j{len(jobs)}", m, r, sizes,
+                              topos[len(jobs) % 3], rng,
+                              arrival=arrival, port_base=base))
+        arrival += rng.expovariate(1.0 / 30.0)
+    return n_ports, jobs
+
+
+class TestOldVsNew:
+    """The ISSUE-3 acceptance gate: identical results on a randomized
+    50-job workload, old core vs compacted core, per policy."""
+
+    @pytest.mark.parametrize("pname", ALL_POLICIES)
+    def test_randomized_50_jobs_identical(self, pname):
+        n_ports, jobs = _random_batch()
+        res_new = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
+        n_ports, jobs = _random_batch()
+        res_old = simulate_reference(jobs, make_scheduler(pname),
+                                     n_ports=n_ports)
+        assert res_new.jct == res_old.jct              # exact, not approx
+        assert res_new.cct == res_old.cct
+        assert res_new.mf_service_order == res_old.mf_service_order
+        assert res_new.mf_finish == res_old.mf_finish
+        assert res_new.events == res_old.events
+
+    @pytest.mark.parametrize("pname", ("msa", "fair"))
+    def test_with_perturbations_identical(self, pname):
+        perts = [Perturbation(time=40.0, port=3, factor=0.25),
+                 Perturbation(time=120.0, port=3, factor=None)]
+        n_ports, jobs = _random_batch(n_jobs=12, seed=5)
+        res_new = Simulator(Fabric(n_ports=n_ports), jobs,
+                            make_scheduler(pname),
+                            perturbations=list(perts)).run()
+        n_ports, jobs = _random_batch(n_jobs=12, seed=5)
+        res_old = ReferenceSimulator(Fabric(n_ports=n_ports), jobs,
+                                     make_scheduler(pname),
+                                     perturbations=list(perts)).run()
+        assert res_new.jct == res_old.jct
+        assert res_new.cct == res_old.cct
+        assert res_new.mf_service_order == res_old.mf_service_order
+
+
+def _residue_job() -> JobDAG:
+    """Two disjoint flows whose sizes differ by < EPS: the shorter one
+    hits zero first at the event horizon, the longer is committed with a
+    sub-EPS residue — exactly the leak scenario."""
+    j = JobDAG(name="j")
+    j.add_metaflow("m", flows=[(0, 1, 1.0), (2, 3, 1.0 + 5e-10)])
+    j.add_metaflow("m2", flows=[(0, 1, 1.0)], deps=["m"])
+    j.add_task("c", load=1.0, deps=["m2"])
+    j.validate()
+    return j
+
+
+class TestResidualLeak:
+    def test_finish_zeroes_table_slice(self):
+        sim = Simulator(Fabric(n_ports=4), [_residue_job()],
+                        make_scheduler("fair"))
+        sim.run()
+        # Every metaflow finished -> every slice must be *exactly* zero.
+        assert np.all(sim._rem == 0.0)
+        assert np.all(sim._mf_frozen == 0.0)
+
+    def test_reference_core_leaks_residue(self):
+        """The old core keeps the sub-EPS residue (documents that the
+        regression test actually bites)."""
+        sim = ReferenceSimulator(Fabric(n_ports=4), [_residue_job()],
+                                 make_scheduler("fair"))
+        sim.run()
+        assert sim._rem.max() > 0.0
+
+
+class TestDegradeRestoreCaching:
+    """Decision caching must be invalidated on *both* edges of a
+    transient straggler (degrade then ``factor=None`` restore): cached
+    and uncached runs stay bit-equal through the pair."""
+
+    @staticmethod
+    def _contended_jobs() -> list[JobDAG]:
+        jobs = []
+        for k in range(3):
+            j = JobDAG(name=f"j{k}", arrival=float(k))
+            j.add_metaflow("m0", flows=[(k, 3, 4.0)])
+            j.add_metaflow("m1", flows=[(k, 4, 2.0)], deps=["m0"])
+            j.add_task("c0", load=1.0, deps=["m0"])
+            j.add_task("c1", load=1.0, deps=["m1", "c0"])
+            jobs.append(j)
+        return jobs
+
+    PERTS = (Perturbation(time=2.0, port=3, factor=0.25),
+             Perturbation(time=6.0, port=3, factor=None))
+
+    @pytest.mark.parametrize("pname", ALL_POLICIES)
+    def test_cached_equals_uncached_through_pair(self, pname):
+        runs = {}
+        for cache in (True, False):
+            res = Simulator(Fabric(n_ports=5), self._contended_jobs(),
+                            make_scheduler(pname),
+                            perturbations=list(self.PERTS),
+                            cache_decisions=cache).run()
+            runs[cache] = res
+        assert runs[True].jct == runs[False].jct
+        assert runs[True].cct == runs[False].cct
+        assert runs[True].mf_service_order == runs[False].mf_service_order
+        assert runs[False].sched_refresh == 0
+
+    def test_perturbation_pair_changes_schedule(self):
+        """Guard that the pair actually bends the trajectory (otherwise
+        the equivalence above would be vacuous)."""
+        base = Simulator(Fabric(n_ports=5), self._contended_jobs(),
+                         make_scheduler("msa")).run()
+        bent = Simulator(Fabric(n_ports=5), self._contended_jobs(),
+                         make_scheduler("msa"),
+                         perturbations=list(self.PERTS)).run()
+        assert bent.avg_jct > base.avg_jct
+
+    def test_restore_returns_to_nominal_rate(self):
+        # 8 units on a degraded ingress: 2 at rate 1 (t<2), then 1 unit
+        # over the 0.25x window (2..6), then 5 at rate 1 -> done at 11.
+        j = JobDAG(name="j")
+        j.add_metaflow("m", flows=[(0, 1, 8.0)])
+        j.add_task("c", load=0.0, deps=["m"])
+        res = Simulator(Fabric(n_ports=2), [j], make_scheduler("msa"),
+                        perturbations=[Perturbation(time=2.0, port=1,
+                                                    factor=0.25),
+                                       Perturbation(time=6.0, port=1,
+                                                    factor=None)]).run()
+        assert res.cct["j"] == pytest.approx(11.0)
+
+
+class TestMaddPaths:
+    """SchedView.madd's vectorized and scalar paths == the object-level
+    reference (`repro.core.madd.madd_rates`) on randomized groups."""
+
+    @pytest.mark.parametrize("n_flows", [3, 9, 40])
+    def test_against_reference(self, n_flows):
+        from repro.core.fabric import Residual
+        from repro.core.madd import madd_rates
+        from repro.core.metaflow import Flow
+        from repro.core.simulator import SchedView
+        rng = random.Random(n_flows)
+        n_ports = 10
+        flows = [Flow(src=rng.randrange(5), dst=5 + rng.randrange(5),
+                      size=rng.uniform(0.0, 4.0)) for _ in range(n_flows)]
+        eg = [rng.uniform(0.5, 2.0) for _ in range(n_ports)]
+        ing = [rng.uniform(0.5, 2.0) for _ in range(n_ports)]
+
+        ref = madd_rates(flows, Residual(eg=list(eg), ing=list(ing)))
+
+        ix = np.arange(n_flows)
+        view = SchedView(
+            t=0.0, n_ports=n_ports,
+            src=np.array([f.src for f in flows], dtype=np.int32),
+            dst=np.array([f.dst for f in flows], dtype=np.int32),
+            rem=np.array([f.remaining for f in flows]),
+            egress=np.array(eg), ingress=np.array(ing),
+            active=[], jobs=[], mf_records={})
+        rates = np.zeros(n_flows)
+        view.madd(ix, np.array(eg), np.array(ing), rates)  # n<=16 -> scalar
+
+        for k, f in enumerate(flows):
+            assert rates[k] == pytest.approx(ref.get(f.id, 0.0), abs=1e-12)
+
+        # Force the vectorized path via a non-contiguous index array.
+        wide = np.zeros(2 * n_flows)
+        view2 = SchedView(
+            t=0.0, n_ports=n_ports,
+            src=np.repeat(view.src, 2), dst=np.repeat(view.dst, 2),
+            rem=np.repeat(view.rem, 2),
+            egress=np.array(eg), ingress=np.array(ing),
+            active=[], jobs=[], mf_records={})
+        view2.rem[1::2] = 0.0           # duplicates dead: same live set
+        view2.madd(np.arange(0, 2 * n_flows, 2), np.array(eg),
+                   np.array(ing), wide)
+        for k, f in enumerate(flows):
+            assert wide[2 * k] == pytest.approx(ref.get(f.id, 0.0),
+                                                abs=1e-12)
+
+
+class TestDebugChecks:
+    def test_capacity_check_passes_for_real_policies(self):
+        n_ports, jobs = _random_batch(n_jobs=6, seed=3)
+        res = Simulator(Fabric(n_ports=n_ports), jobs,
+                        make_scheduler("msa"), debug_checks=True).run()
+        assert len(res.jct) == 6
+
+    def test_capacity_check_catches_oversubscription(self):
+        class Bogus(Scheduler):
+            name = "bogus"
+
+            def schedule(self, view):
+                return Decision(rates=np.full_like(view.rem, 10.0))
+
+        j = JobDAG(name="j")
+        j.add_metaflow("m", flows=[(0, 1, 4.0)])
+        j.add_task("c", load=1.0, deps=["m"])
+        with pytest.raises(AssertionError, match="oversubscribed"):
+            Simulator(Fabric(n_ports=2), [j], Bogus(),
+                      debug_checks=True).run()
