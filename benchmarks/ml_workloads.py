@@ -1,18 +1,23 @@
 """ML-parallelism workloads: every registered policy x appdag scenarios.
 
 The bridge benchmark the appdag subsystem exists for: real parallelism
-plans (dense-DP training, MoE EP training, pipelined serving, and the
-mixed cluster sharing one fabric with MapReduce) compiled into JobDAGs
-and swept across scheduling policies, reporting per-policy average
-JCT / CCT per scenario.
+plans (dense-DP training, MoE EP training, pipelined serving, the mixed
+cluster sharing one fabric with MapReduce, and the same mix through a
+3:1-oversubscribed leaf-spine) compiled into JobDAGs and swept across
+scheduling policies, reporting per-policy average JCT / CCT per scenario.
 
 Harness rows (``benchmarks/run.py``): one row per scenario,
 ``derived = "<policy>=<jct>/<cct>;..."`` plus ``fifo_over_msa`` /
-``fair_over_msa`` ratios when those policies ran.
+``fair_over_msa`` ratios when those policies ran.  ``--topology SPEC``
+overrides every scenario's network (any ``repro.core.make_topology``
+spec, e.g. ``leaf_spine_3to1``, ``fat_tree``); overridden rows are named
+``ml/<scenario>@<spec>`` so they never collide with the default
+trajectory.
 
-Standalone:
+Standalone (runs with per-link ``debug_checks`` — every decision is
+verified to never oversubscribe any link of the routed topology):
   PYTHONPATH=src python benchmarks/ml_workloads.py [--policy NAME ...]
-      [--scenario NAME ...] [--seed N] [--quick]
+      [--scenario NAME ...] [--topology SPEC] [--seed N] [--quick]
 """
 
 from __future__ import annotations
@@ -20,20 +25,25 @@ from __future__ import annotations
 import time
 
 from repro.appdag import SCENARIOS, build_scenario
+from repro.appdag.mixer import SCENARIO_TOPOLOGY
 from repro.core import available_policies, make_scheduler, simulate
 
 DEFAULT_POLICIES = ("msa", "varys", "fifo", "fair", "cpath")
 
 
-def run(quick: bool = False, policies=None, seed: int = 0) -> list[tuple]:
+def run(quick: bool = False, policies=None, seed: int = 0,
+        topology: str | None = None) -> list[tuple]:
+    if topology == "big_switch":
+        topology = None   # explicit default: same rows/gates as no flag
     policies = tuple(policies) if policies else DEFAULT_POLICIES
     rows = []
     for scen in SCENARIOS:
         t0 = time.perf_counter()
         cells = []
         for pname in policies:
-            n_ports, jobs = build_scenario(scen, seed=seed, quick=quick)
-            res = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
+            fabric, jobs = build_scenario(scen, seed=seed, quick=quick,
+                                          topology=topology)
+            res = simulate(jobs, make_scheduler(pname), fabric=fabric)
             if len(res.jct) != len(jobs):
                 raise AssertionError(
                     f"{scen}/{pname}: {len(res.jct)} JCTs for "
@@ -46,7 +56,14 @@ def run(quick: bool = False, policies=None, seed: int = 0) -> list[tuple]:
             for p in ("fifo", "fair"):
                 if p in jct:
                     derived += f";{p}_over_msa={jct[p] / jct['msa']:.3f}"
-        rows.append((f"ml/{scen}", us, derived))
+        # Rows running on any non-big-switch network carry it as an
+        # ``@spec`` suffix — whether overridden or the scenario's own
+        # default — so JSON trajectories are tagged accurately per row.
+        spec = topology or SCENARIO_TOPOLOGY.get(scen)
+        if spec == "big_switch":   # forced back to the paper fabric
+            spec = None
+        name = f"ml/{scen}" if spec is None else f"ml/{scen}@{spec}"
+        rows.append((name, us, derived))
     return rows
 
 
@@ -66,6 +83,8 @@ def check(rows) -> list[str]:
             jct, cct = (float(x) for x in v.split("/"))
             if not (0 < jct < float("inf")) or not (0 <= cct <= jct + 1e-9):
                 errs.append(f"{name}: degenerate {p} jct/cct {v}")
+        if "@" in name:
+            continue   # routed topology: the paper ratios don't apply
         if "fair_over_msa" in ratios and ratios["fair_over_msa"] < 1.0:
             errs.append(f"{name}: MSA loses to per-flow fairness "
                         f"({ratios['fair_over_msa']:.3f})")
@@ -87,6 +106,10 @@ def main() -> None:
     ap.add_argument("--scenario", action="append", default=None,
                     choices=sorted(SCENARIOS), metavar="NAME",
                     help="scenario to run (repeatable; default: all)")
+    ap.add_argument("--topology", default=None, metavar="SPEC",
+                    help="network topology override (big_switch, "
+                         "leaf_spine_<R>to1, fat_tree; default: each "
+                         "scenario's registered topology)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
@@ -94,14 +117,17 @@ def main() -> None:
     scenarios = tuple(args.scenario) if args.scenario else tuple(SCENARIOS)
 
     for scen in scenarios:
-        n_ports, jobs = build_scenario(scen, seed=args.seed, quick=args.quick)
-        print(f"\n== {scen}  ({n_ports} ports, {len(jobs)} jobs, "
-              f"{sum(len(j.metaflows) for j in jobs)} metaflows) ==")
+        fabric, jobs = build_scenario(scen, seed=args.seed, quick=args.quick,
+                                      topology=args.topology)
+        print(f"\n== {scen}  ({fabric.topology.describe()}, {len(jobs)} "
+              f"jobs, {sum(len(j.metaflows) for j in jobs)} metaflows) ==")
         print(f"  {'policy':<8} {'avg JCT':>12} {'avg CCT':>12}")
         for pname in policies:
-            n_ports, jobs = build_scenario(scen, seed=args.seed,
-                                           quick=args.quick)
-            res = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
+            fabric, jobs = build_scenario(scen, seed=args.seed,
+                                          quick=args.quick,
+                                          topology=args.topology)
+            res = simulate(jobs, make_scheduler(pname), fabric=fabric,
+                           debug_checks=True)
             print(f"  {pname:<8} {res.avg_jct:>12.3f} {res.avg_cct:>12.3f}")
 
 

@@ -19,9 +19,15 @@ Writes ``BENCH_sim_core.json``:
 Usage:
   PYTHONPATH=src python benchmarks/perf_sim_core.py [--out PATH]
       [--sizes N ...] [--policies NAME ...] [--seed N] [--smoke]
+      [--topology SPEC]
 
 ``--smoke`` is the CI profile: tiny sizes, baseline only at the smallest,
-then validates the emitted JSON and exits non-zero on any check failure.
+per-link ``debug_checks`` on, then validates the emitted JSON and exits
+non-zero on any check failure.  ``--topology`` (any
+``repro.core.make_topology`` spec) runs the sweep on a routed topology;
+every row is tagged with its topology so the ``BENCH_sim_core.json``
+trajectory stays comparable across specs, and the pre-topology reference
+core (big-switch only) is skipped with a note.
 """
 
 from __future__ import annotations
@@ -34,7 +40,8 @@ import time
 import random
 
 from repro.appdag.mixer import _fb_templates, mixed_templates, poisson_mix
-from repro.core import available_policies, make_scheduler, simulate
+from repro.core import (Fabric, available_policies, make_scheduler,
+                        make_topology, simulate)
 from repro.core.simref import simulate_reference
 
 N_PORTS = 48
@@ -69,17 +76,24 @@ def scale_mixed(n_jobs: int, seed: int = 0, n_ports: int = N_PORTS):
     return n_ports, jobs
 
 
-def _run_one(core: str, pname: str, n_jobs: int, seed: int) -> dict:
+def _run_one(core: str, pname: str, n_jobs: int, seed: int,
+             topology: str = "big_switch",
+             debug_checks: bool = False) -> dict:
     n_ports, jobs = scale_mixed(n_jobs, seed=seed)
     sched = make_scheduler(pname)
-    run = simulate if core == "compacted" else simulate_reference
     t0 = time.perf_counter()
-    res = run(jobs, sched, n_ports=n_ports)
+    if core == "compacted":
+        fabric = Fabric(topology=make_topology(topology, n_ports))
+        res = simulate(jobs, sched, fabric=fabric,
+                       debug_checks=debug_checks)
+    else:
+        res = simulate_reference(jobs, sched, n_ports=n_ports)
     wall = time.perf_counter() - t0
     if len(res.jct) != n_jobs:
         raise AssertionError(f"{core}/{pname}/{n_jobs}: incomplete run")
     return {
         "core": core, "policy": pname, "jobs": n_jobs,
+        "topology": topology,
         "wall_s": round(wall, 3), "events": res.events,
         "events_per_s": round(res.events / wall, 1),
         "sched_full": res.sched_full, "sched_refresh": res.sched_refresh,
@@ -99,9 +113,17 @@ def _assert_equivalent(pname: str, n_jobs: int, seed: int) -> None:
 
 
 def run_bench(sizes, policies, baseline, seed: int,
-              equivalence_at: int | None) -> dict:
+              equivalence_at: int | None, topology: str = "big_switch",
+              debug_checks: bool = False) -> dict:
     rows: list[dict] = []
     notes: list[str] = []
+    if topology != "big_switch":
+        # The frozen pre-topology core only models the big switch.
+        if baseline or equivalence_at is not None:
+            notes.append(f"reference core skipped: topology {topology} "
+                         "predates it (big-switch only)")
+        baseline = {}
+        equivalence_at = None
     if equivalence_at is not None:
         for pname in policies:
             _assert_equivalent(pname, equivalence_at, seed)
@@ -114,7 +136,8 @@ def run_bench(sizes, policies, baseline, seed: int,
             if cap is not None and n_jobs > cap:
                 capped.append(f"{pname}@{n_jobs}")
                 continue
-            row = _run_one("compacted", pname, n_jobs, seed)
+            row = _run_one("compacted", pname, n_jobs, seed,
+                           topology=topology, debug_checks=debug_checks)
             rows.append(row)
             print(f"  compacted {pname:<6} {n_jobs:>5} jobs  "
                   f"{row['wall_s']:>8.2f}s  {row['events_per_s']:>8.1f} ev/s",
@@ -144,6 +167,7 @@ def run_bench(sizes, policies, baseline, seed: int,
         "bench": "sim_core",
         "scenario": "scale_mixed (appdag train/serve + FB MapReduce)",
         "fabric_ports": N_PORTS,
+        "topology": topology,
         "seed": seed,
         "rows": rows,
         "notes": notes,
@@ -161,8 +185,8 @@ def check(doc: dict, smoke: bool) -> list[str]:
     if not doc.get("rows"):
         errs.append("no rows emitted")
     for r in doc.get("rows", ()):
-        for key in ("core", "policy", "jobs", "wall_s", "events",
-                    "events_per_s", "sched_full", "sched_refresh"):
+        for key in ("core", "policy", "jobs", "topology", "wall_s",
+                    "events", "events_per_s", "sched_full", "sched_refresh"):
             if key not in r:
                 errs.append(f"row missing {key}: {r}")
                 break
@@ -178,14 +202,22 @@ def check(doc: dict, smoke: bool) -> list[str]:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--out", default="BENCH_sim_core.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_sim_core.json, or "
+                         "BENCH_sim_core_<topology>.json off big-switch "
+                         "so routed sweeps never clobber the big-switch "
+                         "trajectory baseline)")
     ap.add_argument("--sizes", type=int, nargs="+", default=None)
     ap.add_argument("--policies", nargs="+", default=None,
                     choices=available_policies(), metavar="NAME")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI profile: tiny sizes, validate JSON, exit 1 "
-                         "on check failure")
+                    help="CI profile: tiny sizes, per-link debug checks, "
+                         "validate JSON, exit 1 on check failure")
+    ap.add_argument("--topology", default="big_switch", metavar="SPEC",
+                    help="network topology spec (big_switch, "
+                         "leaf_spine_<R>to1, fat_tree); non-big-switch "
+                         "sweeps skip the pre-topology reference core")
     args = ap.parse_args()
 
     if args.smoke:
@@ -199,7 +231,12 @@ def main() -> None:
         baseline = BASELINE
         equivalence_at = min(sizes)
 
-    doc = run_bench(sizes, policies, baseline, args.seed, equivalence_at)
+    if args.out is None:
+        args.out = ("BENCH_sim_core.json" if args.topology == "big_switch"
+                    else f"BENCH_sim_core_{args.topology}.json")
+
+    doc = run_bench(sizes, policies, baseline, args.seed, equivalence_at,
+                    topology=args.topology, debug_checks=args.smoke)
     with open(args.out, "w") as fh:
         json.dump(doc, fh, indent=1, sort_keys=True)
         fh.write("\n")

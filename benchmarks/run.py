@@ -53,6 +53,10 @@ def main() -> None:
                          f"available: {', '.join(available_policies())})")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + check failures as JSON")
+    ap.add_argument("--topology", metavar="SPEC", default=None,
+                    help="network topology override for the benches that "
+                         "take one (big_switch, leaf_spine_<R>to1, "
+                         "fat_tree); JSON rows are tagged per topology")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -62,13 +66,23 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         kwargs = {"quick": args.quick}
-        if args.policy and "policies" in inspect.signature(mod.run).parameters:
+        params = inspect.signature(mod.run).parameters
+        if args.policy and "policies" in params:
             kwargs["policies"] = args.policy
+        takes_topology = "topology" in params
+        if args.topology and takes_topology:
+            kwargs["topology"] = args.topology
         rows = mod.run(**kwargs)
         for r in rows:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
+            # Topology-aware benches suffix non-big-switch rows with
+            # "@spec" (scenario defaults included); the tag reads it per
+            # row so e.g. ml/mixed_oversub_3to1 is never mislabeled.
+            topo_tag = r[0].split("@", 1)[1] if "@" in r[0] \
+                else "big_switch"
             json_rows.append({"bench": name, "name": r[0],
-                              "us_per_call": r[1], "derived": r[2]})
+                              "us_per_call": r[1], "derived": r[2],
+                              "topology": topo_tag})
         errs = mod.check(rows)
         for e in errs:
             print(f"CHECK-FAIL[{name}]: {e}", file=sys.stderr)

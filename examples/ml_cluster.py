@@ -56,8 +56,8 @@ def main() -> None:
     print(f"\nmixed cluster (training + serving + MapReduce, one fabric):")
     print(f"  {'policy':<8} {'avg JCT':>10} {'avg CCT':>10}")
     for pname in policies:
-        n_ports, jobs = build_scenario("mixed", seed=0)
-        res = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
+        fabric, jobs = build_scenario("mixed", seed=0)
+        res = simulate(jobs, make_scheduler(pname), fabric=fabric)
         print(f"  {pname:<8} {res.avg_jct:>10.3f} {res.avg_cct:>10.3f}")
 
 

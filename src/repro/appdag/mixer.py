@@ -7,11 +7,15 @@ template DAG is built once at ``port_base=0`` and stamped out via
 port placement (the port-numbering convention of DESIGN.md §9: a job
 occupies ``[offset, offset + span)``).
 
-``SCENARIOS`` registers the four canonical scenarios the ML-workload
+``SCENARIOS`` registers the canonical scenarios the ML-workload
 benchmark sweeps (dense-DP training, MoE EP training, pipelined serving,
-and the mixed cluster where all three share the fabric with MapReduce);
-``build_scenario(name, seed, quick)`` returns ``(n_ports, jobs)`` with
-fresh job objects every call (simulation mutates jobs).
+the mixed cluster where all three share the fabric with MapReduce, and
+the same mix on a 3:1-oversubscribed leaf-spine);
+``build_scenario(name, seed, quick)`` returns ``(fabric, jobs)`` with
+fresh job and fabric objects every call (simulation mutates both).  Each
+scenario carries a default network topology in ``SCENARIO_TOPOLOGY``
+(big-switch unless stated); the ``topology`` argument / ``--topology``
+benchmark flag overrides it with any ``repro.core.make_topology`` spec.
 """
 
 from __future__ import annotations
@@ -23,6 +27,7 @@ from repro.appdag.plans import (PlanAxes, dense_train_dag, moe_train_dag,
                                 pipeline_serve_dag)
 from repro.configs import get_config
 from repro.configs.base import LM_SHAPES
+from repro.core.fabric import Fabric, make_topology
 from repro.core.metaflow import JobDAG
 from repro.core.workload import build_job, synth_fb_coflow
 
@@ -180,18 +185,41 @@ def scenario_mixed(seed: int = 0, quick: bool = False):
     return n_ports, jobs
 
 
+def scenario_mixed_oversub(seed: int = 0, quick: bool = False):
+    """The mixed cluster under core contention: the *identical*
+    FB+appdag species and arrival process as ``mixed`` (delegated, so
+    the two can never drift apart), but scheduled through a
+    3:1-oversubscribed leaf-spine (``SCENARIO_TOPOLOGY``) — random
+    contiguous placement makes most training/shuffle spans straddle
+    leaves, so the leaf uplinks, not the NICs, become the contended
+    resource."""
+    return scenario_mixed(seed=seed, quick=quick)
+
+
 SCENARIOS = {
     "dense_dp": scenario_dense_dp,
     "moe_ep": scenario_moe_ep,
     "pipe_serve": scenario_pipe_serve,
     "mixed": scenario_mixed,
+    "mixed_oversub_3to1": scenario_mixed_oversub,
+}
+
+# Default network topology per scenario (big_switch when absent); any
+# ``repro.core.make_topology`` spec.
+SCENARIO_TOPOLOGY = {
+    "mixed_oversub_3to1": "leaf_spine_3to1",
 }
 
 
-def build_scenario(name: str, seed: int = 0, quick: bool = False
-                   ) -> tuple[int, list[JobDAG]]:
-    """(n_ports, fresh jobs) for one registered scenario."""
+def build_scenario(name: str, seed: int = 0, quick: bool = False,
+                   topology: str | None = None
+                   ) -> tuple[Fabric, list[JobDAG]]:
+    """(fresh fabric, fresh jobs) for one registered scenario.
+
+    ``topology`` overrides the scenario's registered default spec."""
     if name not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; known: "
                        f"{sorted(SCENARIOS)}")
-    return SCENARIOS[name](seed=seed, quick=quick)
+    n_ports, jobs = SCENARIOS[name](seed=seed, quick=quick)
+    spec = topology or SCENARIO_TOPOLOGY.get(name, "big_switch")
+    return Fabric(topology=make_topology(spec, n_ports)), jobs

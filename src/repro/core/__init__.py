@@ -5,7 +5,9 @@ through its registry (``make_scheduler``/``available_policies``); the
 concrete classes are re-exported here for direct use.
 """
 
-from repro.core.fabric import Fabric
+from repro.core.fabric import (BigSwitch, Fabric, FatTree, LeafSpine,
+                               Topology, big_switch, fat_tree, leaf_spine,
+                               make_topology)
 from repro.core.metaflow import (ComputeTask, Flow, JobDAG, Metaflow,
                                  figure1_jobs, figure2_job)
 from repro.core.sched import (CriticalPathScheduler, Decision, FairScheduler,
@@ -16,10 +18,12 @@ from repro.core.simref import ReferenceSimulator, simulate_reference
 from repro.core.simulator import Perturbation, SimResult, Simulator, simulate
 
 __all__ = [
-    "ComputeTask", "CriticalPathScheduler", "Decision", "Fabric",
-    "FairScheduler", "FifoScheduler", "Flow", "JobDAG", "MSAScheduler",
-    "Metaflow", "Perturbation", "ReferenceSimulator", "Scheduler",
-    "SimResult", "Simulator", "VarysScheduler", "available_policies",
-    "figure1_jobs", "figure2_job", "make_scheduler", "metaflow_priorities",
-    "register", "simulate", "simulate_reference",
+    "BigSwitch", "ComputeTask", "CriticalPathScheduler", "Decision",
+    "Fabric", "FairScheduler", "FatTree", "FifoScheduler", "Flow", "JobDAG",
+    "LeafSpine", "MSAScheduler", "Metaflow", "Perturbation",
+    "ReferenceSimulator", "Scheduler", "SimResult", "Simulator", "Topology",
+    "VarysScheduler", "available_policies", "big_switch", "fat_tree",
+    "figure1_jobs", "figure2_job", "leaf_spine", "make_scheduler",
+    "make_topology", "metaflow_priorities", "register", "simulate",
+    "simulate_reference",
 ]

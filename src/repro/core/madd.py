@@ -2,27 +2,33 @@
 
 Given a set of flows that should all finish *simultaneously* (because the
 downstream consumer needs every one of them — the JCT of a stage is the max
-over its reducers), MADD computes the slowest port bottleneck
+over its reducers), MADD computes the slowest bottleneck over the link
+resources the flows cross
 
-    gamma = max over ports of (port demand / port residual capacity)
+    gamma = max over links of (link demand / link residual capacity)
 
 and allocates each flow rate = remaining / gamma.  Any rate profile that
 finishes some flow earlier wastes bandwidth that other coflows/metaflows
 could use; MADD is the minimal allocation achieving the bottleneck time.
+
+On the paper's big-switch fabric the links are exactly the egress and
+ingress ports (every flow crosses two), which recovers the textbook
+per-port form; on leaf-spine / fat-tree topologies the same max runs
+over every link of each flow's deterministic route, so an oversubscribed
+core leg correctly dominates the bottleneck.
 
 The paper's MSA adopts MADD verbatim for the per-metaflow bandwidth
 assignment step (Algorithm 1, line 11).
 
 This module is the *object-level reference implementation* (readable
 ``Flow``/``Residual`` arithmetic).  The simulator's hot path runs the
-array forms on the compacted view instead — ``SchedView.madd`` (with a
-scalar small-group variant) in ``core/simulator.py``, DESIGN.md §10 —
-and tests/test_sim_core_equiv.py cross-checks both against this one on
+array forms on the compacted flow->links incidence instead —
+``SchedView.madd`` (with a scalar small-group variant) in
+``core/simulator.py``, DESIGN.md §10/§11 — and
+tests/test_sim_core_equiv.py cross-checks both against this one on
 randomized groups."""
 
 from __future__ import annotations
-
-from collections import defaultdict
 
 from repro.core.fabric import Residual
 from repro.core.metaflow import EPS, Flow
@@ -31,7 +37,7 @@ from repro.core.metaflow import EPS, Flow
 def madd_rates(flows: list[Flow], residual: Residual) -> dict[int, float]:
     """Rates finishing all ``flows`` simultaneously within ``residual``.
 
-    Returns {} (all-zero) when any required port has no residual capacity —
+    Returns {} (all-zero) when any required link has no residual capacity —
     the metaflow waits for this slot; work-conserving backfill may still
     advance individual flows afterwards.  Deducts granted rates from
     ``residual`` in place.
@@ -40,23 +46,19 @@ def madd_rates(flows: list[Flow], residual: Residual) -> dict[int, float]:
     if not live:
         return {}
 
-    dem_out: dict[int, float] = defaultdict(float)
-    dem_in: dict[int, float] = defaultdict(float)
+    dem: dict[int, float] = {}
     for f in live:
-        dem_out[f.src] += f.remaining
-        dem_in[f.dst] += f.remaining
+        for link in residual.links(f):
+            dem[link] = dem.get(link, 0.0) + f.remaining
 
     gamma = 0.0
-    for port, dem in dem_out.items():
-        cap = residual.eg[port]
+    for link, d in dem.items():
+        cap = residual.cap[link]
         if cap <= EPS:
             return {}
-        gamma = max(gamma, dem / cap)
-    for port, dem in dem_in.items():
-        cap = residual.ing[port]
-        if cap <= EPS:
-            return {}
-        gamma = max(gamma, dem / cap)
+        g = d / cap
+        if g > gamma:
+            gamma = g
     if gamma <= EPS:
         return {}
 
@@ -73,21 +75,20 @@ def madd_rates(flows: list[Flow], residual: Residual) -> dict[int, float]:
     return rates
 
 
-def bottleneck_time(flows: list[Flow], egress: list[float],
-                    ingress: list[float]) -> float:
-    """Varys' effective-bottleneck completion time on *full* port caps.
+def bottleneck_time(flows: list[Flow], residual: Residual) -> float:
+    """Effective-bottleneck completion time on the given (full) link
+    capacities — Varys' SEBF key, generalized to any routed topology.
 
-    Used by SEBF ordering (smallest effective bottleneck first).
+    ``residual`` supplies the capacity vector and routing; it is read,
+    never deducted.
     """
-    dem_out: dict[int, float] = defaultdict(float)
-    dem_in: dict[int, float] = defaultdict(float)
+    dem: dict[int, float] = {}
     for f in flows:
         if not f.done:
-            dem_out[f.src] += f.remaining
-            dem_in[f.dst] += f.remaining
+            for link in residual.links(f):
+                dem[link] = dem.get(link, 0.0) + f.remaining
     gamma = 0.0
-    for port, dem in dem_out.items():
-        gamma = max(gamma, dem / egress[port] if egress[port] > EPS else float("inf"))
-    for port, dem in dem_in.items():
-        gamma = max(gamma, dem / ingress[port] if ingress[port] > EPS else float("inf"))
+    for link, d in dem.items():
+        cap = residual.cap[link]
+        gamma = max(gamma, d / cap if cap > EPS else float("inf"))
     return gamma

@@ -127,57 +127,51 @@ class Scheduler(abc.ABC):
 
         ``owners`` aligns with ``groups``: the ActiveMF record (or list of
         records, for coflow groups) owning each group.  When given, the
-        walk keeps bitmasks of exhausted ports and skips any group whose
-        live-port mask intersects them with one integer AND — exactly the
+        walk keeps a bitmask of exhausted links and skips any group whose
+        live-link mask intersects it with one integer AND — exactly the
         groups whose MADD would return without granting (it refuses when
-        any required port is exhausted, and residuals only shrink during
+        any required link is exhausted, and residuals only shrink during
         the walk), so the skip is bit-exact while capping the expensive
-        MADD calls at O(ports) per decision however long the priority
+        MADD calls at O(links) per decision however long the priority
         list is."""
         rates = np.zeros_like(view.rem)
-        res_eg = view.egress.copy()
-        res_in = view.ingress.copy()
         if view.legacy_walk:
             # Frozen pre-ISSUE-3 walk (reference-simulator baseline).
+            res_eg = view.egress.copy()
+            res_in = view.ingress.copy()
             for ix in groups:
                 view.madd_legacy(ix, res_eg, res_in, rates)
             if groups:
                 view.backfill_legacy(np.concatenate(groups), res_eg,
                                      res_in, rates)
             return rates
+        res = view.link_cap.copy()
         if owners is None:
             for ix in groups:
-                view.madd(ix, res_eg, res_in, rates)
+                view.madd(ix, res, rates)
         else:
-            ex_out, ex_in = view.exhausted_masks(res_eg, res_in)
-            masks_of = view.port_masks
+            ex = view.exhausted_mask(res)
+            mask_of = view.link_mask
             for ix, owner in zip(groups, owners):
                 if type(owner) is list:
-                    pm_out = pm_in = 0
+                    pm = 0
                     for rec in owner:
-                        o = rec.pm_out
-                        if o is None:
-                            o, i = masks_of(rec)
-                        else:
-                            i = rec.pm_in
-                        pm_out |= o
-                        pm_in |= i
+                        o = rec.pm
+                        pm |= mask_of(rec) if o is None else o
                 else:
-                    pm_out = owner.pm_out
-                    if pm_out is None:
-                        pm_out, pm_in = masks_of(owner)
-                    else:
-                        pm_in = owner.pm_in
-                if (pm_out & ex_out) or (pm_in & ex_in):
-                    continue          # some required port is exhausted
-                sat_out, sat_in = view.madd(ix, res_eg, res_in, rates)
-                ex_out |= sat_out
-                ex_in |= sat_in
-        # Backfill needs residual on both ends of some pair; when every
-        # egress (or every ingress) port is exhausted no flow can receive
-        # a grant, so the whole sweep (and its concatenate) is skipped —
-        # exact, and the common case under a deep backlog.
-        if groups and (res_eg > EPS).any() and (res_in > EPS).any():
+                    pm = owner.pm
+                    if pm is None:
+                        pm = mask_of(owner)
+                if pm & ex:
+                    continue          # some required link is exhausted
+                ex |= view.madd(ix, res, rates)
+        # Backfill needs residual along a whole path, and every path
+        # enters through a host up-link and leaves through a host
+        # down-link; when either block is fully exhausted no flow can
+        # receive a grant, so the whole sweep (and its concatenate) is
+        # skipped — exact, and the common case under a deep backlog.
+        nh = view.n_hosts
+        if groups and (res[:nh] > EPS).any() and (res[nh:2 * nh] > EPS).any():
             ordered = np.concatenate(groups)
-            view.backfill(ordered, res_eg, res_in, rates)
+            view.backfill(ordered, res, rates)
         return rates

@@ -135,34 +135,31 @@ class FairScheduler(Scheduler):
         rates = np.zeros_like(view.rem)
         if all_ix.size == 0:
             return Decision(rates=rates)
-        eg = view.egress.copy()
-        ing = view.ingress.copy()
-        src = view.src[all_ix]
-        dst = view.dst[all_ix]
+        res = view.link_cap.copy()
+        links, cnt = view.row_entries(all_ix)
+        if np.isscalar(cnt):
+            cnt = np.full(all_ix.size, cnt, dtype=np.int64)
+        starts = np.zeros(all_ix.size, dtype=np.int64)
+        np.cumsum(cnt[:-1], out=starts[1:])
         alive = np.ones(all_ix.size, dtype=bool)
-        # Progressive filling: each round saturates >=1 port, so the loop
-        # runs at most 2 * n_ports times.
-        for _ in range(2 * view.n_ports + 1):
+        # Progressive filling: each round saturates >=1 link, so the loop
+        # runs at most n_links rounds.
+        for _ in range(view.n_links + 1):
             if not alive.any():
                 break
-            n_out = np.bincount(src[alive], minlength=view.n_ports)
-            n_in = np.bincount(dst[alive], minlength=view.n_ports)
+            n_l = np.bincount(links[np.repeat(alive, cnt)],
+                              minlength=view.n_links)
             with np.errstate(divide="ignore", invalid="ignore"):
-                inc = min(
-                    np.where(n_out > 0, eg / np.maximum(n_out, 1),
-                             np.inf).min(),
-                    np.where(n_in > 0, ing / np.maximum(n_in, 1),
-                             np.inf).min())
+                inc = np.where(n_l > 0, res / np.maximum(n_l, 1),
+                               np.inf).min()
             if not np.isfinite(inc):
                 break
             if inc > EPS:
                 rates[all_ix[alive]] += inc
-                eg -= n_out * inc
-                ing -= n_in * inc
-                np.clip(eg, 0.0, None, out=eg)
-                np.clip(ing, 0.0, None, out=ing)
-            # Freeze flows touching an exhausted port.
-            saturated = (eg[src] <= EPS) | (ing[dst] <= EPS)
+                res -= n_l * inc
+                np.clip(res, 0.0, None, out=res)
+            # Freeze flows crossing an exhausted link.
+            saturated = np.logical_or.reduceat(res[links] <= EPS, starts)
             newly = alive & saturated
             if not newly.any() and inc <= EPS:
                 break

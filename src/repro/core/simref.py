@@ -41,6 +41,11 @@ class ReferenceSimulator:
                  record_timeline: bool = False,
                  max_events: int = 5_000_000,
                  cache_decisions: bool = True) -> None:
+        if fabric.topology.kind != "big_switch":
+            raise ValueError(
+                "ReferenceSimulator predates the topology abstraction and "
+                "only supports the big-switch fabric; run routed topologies "
+                "on repro.core.Simulator")
         for j in jobs:
             j.validate()
         names = [j.name for j in jobs]
@@ -290,6 +295,10 @@ class ReferenceSimulator:
                     self.fabric.degrade(p.port, p.factor)
                 view.egress = np.asarray(self.fabric.egress, dtype=np.float64)
                 view.ingress = np.asarray(self.fabric.ingress, dtype=np.float64)
+                # Policy-shared bookkeeping (not frozen semantics): the
+                # link-formulated primitives read capacities through the
+                # derived big-switch link vector.
+                view.link_cap = np.concatenate([view.egress, view.ingress])
                 sched.on_perturbation(p)
                 dirty = True
                 log(f"degrade port {p.port} x{p.factor}" if p.factor
@@ -304,9 +313,9 @@ class ReferenceSimulator:
                     self._mf_live[ordinal] -= cnt
                     rec = self._mfs[ordinal]
                     # Policy-shared bookkeeping (not part of the frozen
-                    # semantics): the walk's port-mask cache must see the
+                    # semantics): the walk's link-mask cache must see the
                     # shrunken live set here too.
-                    rec.pm_out = rec.pm_in = None
+                    rec.pm = None
                     last_flow[rec.job.name] = t
                     if self._mf_live[ordinal] == 0 and ordinal in active:
                         finish_metaflow(rec)

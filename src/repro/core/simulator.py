@@ -1,8 +1,13 @@
-"""Event-driven fluid flow-level simulator over the big-switch fabric.
+"""Event-driven fluid flow-level simulator over a routed link fabric.
 
 The paper evaluates MSA with a flow-level simulator; this is that simulator,
-generalized to multi-stage DAGs (metaflows may have producer compute tasks)
-and multi-job arrival processes.
+generalized to multi-stage DAGs (metaflows may have producer compute tasks),
+multi-job arrival processes, and arbitrary :class:`repro.core.fabric.
+Topology` fabrics — every rate primitive resolves flows against the
+topology's capacitated links through a flow->links CSR incidence
+(DESIGN.md §11), with the paper's big switch as the degenerate
+two-links-per-flow case (bit-identical to the pre-topology port
+formulation).
 
 Fluid model: between events, every flow transfers at a constant rate chosen
 by the pluggable scheduling policy and every runnable compute task
@@ -52,8 +57,28 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.fabric import Fabric
+from repro.core.fabric import Fabric, Topology
 from repro.core.metaflow import EPS, ComputeTask, JobDAG, Metaflow
+
+_MISS = object()   # _inactive_dems cache sentinel (None is a valid hit)
+
+
+def _csr_gather(lp: np.ndarray, li: np.ndarray, rows: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """(entries, cnt): concatenated CSR rows (``li[lp[r]:lp[r+1]]`` for
+    each r in ``rows``, in order) plus per-row lengths.  One vectorized
+    pass: entry positions are a cumsum of ones with a jump correction at
+    each row boundary — shared by every flow->links row gather so the
+    non-obvious arithmetic lives in exactly one place."""
+    cnt = lp[rows + 1] - lp[rows]
+    total = int(cnt.sum())
+    if total == 0:
+        return li[:0], cnt
+    step = np.ones(total, dtype=np.int64)
+    step[0] = lp[rows[0]]
+    ends = np.cumsum(cnt[:-1])
+    step[ends] = lp[rows[1:]] - (lp[rows[:-1]] + cnt[:-1]) + 1
+    return li[np.cumsum(step)], cnt
 
 
 @dataclass
@@ -122,11 +147,10 @@ class ActiveMF:
     # contexts (the reference simulator, hand-built views in tests and
     # microbenchmarks) set ``view_ix = flow_ix``.
     view_ix: np.ndarray | None = None
-    # Live-port bitmasks (ports used by flows with remaining > EPS), cached
-    # by SchedView.port_masks and invalidated by the simulator whenever one
-    # of this record's flows completes.
-    pm_out: int | None = None
-    pm_in: int | None = None
+    # Live-link bitmask (links crossed by flows with remaining > EPS),
+    # cached by SchedView.link_mask and invalidated by the simulator
+    # whenever one of this record's flows completes.
+    pm: int | None = None
 
 
 @dataclass
@@ -188,6 +212,43 @@ class SchedView:
     # per-flow backfill_legacy sweep) so the perf baseline measures the
     # old primitives, not this PR's.
     legacy_walk: bool = False
+    # ---- link incidence (DESIGN.md §11): every rate primitive resolves
+    # flows against the topology's capacitated links.  ``lp``/``li`` are
+    # the flow->links CSR over the view's flow arrays (flow i crosses
+    # ``li[lp[i]:lp[i+1]]``), ``link_cap`` the full current capacities,
+    # ``pathid`` a per-flow deterministic-route key (equal iff two flows
+    # cross the identical link tuple — the backfill dedupe class).
+    # ``uniform2`` marks the degenerate all-paths-are-(up, down) case
+    # (any big-switch view), which the hot paths special-case.  When
+    # ``lp`` is omitted the view derives the big-switch incidence from
+    # ``src``/``dst``/``egress``/``ingress`` (hand-built and
+    # reference-simulator views).
+    link_cap: np.ndarray | None = None
+    n_links: int = 0
+    n_hosts: int = 0       # size of the host up/down link blocks
+    lp: np.ndarray | None = None
+    li: np.ndarray | None = None
+    pathid: np.ndarray | None = None
+    uniform2: bool = False
+    link_names: list[str] | None = None
+
+    def __post_init__(self) -> None:
+        if self.lp is None:
+            # Degenerate big-switch incidence: up(src) then down(dst).
+            nh = int(self.egress.size)
+            self.n_hosts = nh
+            self.n_links = 2 * nh
+            self.link_cap = np.concatenate(
+                [np.asarray(self.egress, dtype=np.float64),
+                 np.asarray(self.ingress, dtype=np.float64)])
+            n = self.src.size
+            li = np.empty(2 * n, dtype=np.int32)
+            li[0::2] = self.src
+            li[1::2] = self.dst + nh
+            self.li = li
+            self.lp = np.arange(n + 1, dtype=np.int64) * 2
+            self.pathid = self.src.astype(np.int64) * nh + self.dst
+            self.uniform2 = True
 
     def mf_remaining(self, a: ActiveMF) -> float:
         if a.view_ix is not None:
@@ -221,163 +282,167 @@ class SchedView:
         return out
 
     # ---------------------------------------------------- shared primitives
-    def port_masks(self, rec: ActiveMF) -> tuple[int, int]:
-        """(egress, ingress) bitmasks of the ports used by the record's
-        *live* flows.  Cached on the record; the owning simulator clears
-        the cache whenever one of the record's flows completes (the only
-        event that shrinks the live set)."""
-        pm = rec.pm_out
+    def row_entries(self, flow_ix: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray | int]:
+        """(links, cnt): concatenated path-link ids of the given flows
+        plus per-flow path lengths (the scalar 2 when every path is the
+        degenerate up/down pair).  Contiguous index ranges — every
+        single-metaflow group — resolve to one CSR slice."""
+        lp = self.lp
+        n = flow_ix.size
+        if n and int(flow_ix[n - 1]) - int(flow_ix[0]) + 1 == n \
+                and (n == 1 or bool((np.diff(flow_ix) == 1).all())):
+            # The span test alone false-positives on unsorted index sets
+            # (e.g. fair's activation-order concat over a full table), so
+            # ascending contiguity is confirmed before trusting the slice.
+            i0 = int(flow_ix[0])
+            i1 = int(flow_ix[n - 1])
+            links = self.li[lp[i0]:lp[i1 + 1]]
+            if self.uniform2:
+                return links, 2
+            return links, lp[i0 + 1:i1 + 2] - lp[i0:i1 + 1]
+        if self.uniform2:
+            out = np.empty(2 * n, dtype=self.li.dtype)
+            out[0::2] = self.src[flow_ix]
+            out[1::2] = self.dst[flow_ix] + self.n_hosts
+            return out, 2
+        return _csr_gather(lp, self.li, flow_ix)
+
+    def link_mask(self, rec: ActiveMF) -> int:
+        """Bitmask of the links crossed by the record's *live* flows.
+        Cached on the record; the owning simulator clears the cache
+        whenever one of the record's flows completes (the only event
+        that shrinks the live set)."""
+        pm = rec.pm
         if pm is None:
             ix = rec.view_ix
-            live = self.rem[ix] > EPS
-            pm = pi = 0
-            for p in np.unique(self.src[ix[live]]).tolist():
-                pm |= 1 << p
-            for p in np.unique(self.dst[ix[live]]).tolist():
-                pi |= 1 << p
-            rec.pm_out = pm
-            rec.pm_in = pi
-        return pm, rec.pm_in
+            live_ix = ix[self.rem[ix] > EPS]
+            pm = 0
+            if live_ix.size:
+                links, _ = self.row_entries(live_ix)
+                for link in np.unique(links).tolist():
+                    pm |= 1 << link
+            rec.pm = pm
+        return pm
 
     @staticmethod
-    def exhausted_masks(res_eg: np.ndarray, res_in: np.ndarray
-                        ) -> tuple[int, int]:
-        """Bitmasks of ports with no residual capacity (walk entry state)."""
-        ex_out = ex_in = 0
-        for p in np.nonzero(res_eg <= EPS)[0].tolist():
-            ex_out |= 1 << p
-        for p in np.nonzero(res_in <= EPS)[0].tolist():
-            ex_in |= 1 << p
-        return ex_out, ex_in
+    def exhausted_mask(res: np.ndarray) -> int:
+        """Bitmask of links with no residual capacity (walk entry state)."""
+        ex = 0
+        for link in np.nonzero(res <= EPS)[0].tolist():
+            ex |= 1 << link
+        return ex
 
-    def madd(self, flow_ix: np.ndarray, res_eg: np.ndarray,
-             res_in: np.ndarray, rates: np.ndarray) -> tuple[int, int]:
-        """Vectorized MADD on residual capacity; writes into ``rates`` and
-        deducts from the residual vectors in place.  No-op when any required
-        port is exhausted (the metaflow waits; backfill may still run).
-        ``flow_ix`` indexes the view's flow arrays (``view_ix`` space).
-        Returns bitmasks of the ports the grant newly exhausted, so walk
-        loops can maintain their exhausted-port state incrementally.
+    def madd(self, flow_ix: np.ndarray, res: np.ndarray,
+             rates: np.ndarray) -> int:
+        """Vectorized MADD on the residual link capacities; writes into
+        ``rates`` and deducts from ``res`` in place.  No-op when any
+        required link is exhausted (the metaflow waits; backfill may
+        still run).  ``flow_ix`` indexes the view's flow arrays
+        (``view_ix`` space).  Returns a bitmask of the links the grant
+        newly exhausted, so walk loops can maintain their exhausted-link
+        state incrementally.
 
         Small groups (most metaflows — collective rounds, narrow
         shuffles) take a scalar path: ~25 numpy calls of fixed overhead
         cost more than the arithmetic for a handful of flows.  The scalar
-        path accumulates per-port sums in the same flow order as
+        path accumulates per-link sums in the same flow order as
         ``bincount``, so every float result is bit-identical."""
         n = flow_ix.size
         if n == 0:
-            return 0, 0
+            return 0
         if n <= 16:
-            return self._madd_small(flow_ix, res_eg, res_in, rates)
+            return self._madd_small(flow_ix, res, rates)
         # Contiguous groups (every single-metaflow group is) read the
-        # arrays through views instead of fancy-gather copies.
+        # arrays through views instead of fancy-gather copies.  Ascending
+        # contiguity is confirmed (not just the span — see row_entries)
+        # so the slice pairing agrees with the link gather for any input.
         i0 = int(flow_ix[0])
         i1 = int(flow_ix[n - 1])
-        contig = i1 - i0 + 1 == n
+        contig = i1 - i0 + 1 == n \
+            and bool((np.diff(flow_ix) == 1).all())
         rem = self.rem[i0:i1 + 1] if contig else self.rem[flow_ix]
         live = rem > EPS
         n_live = int(live.sum())
         if n_live == 0:
-            return 0, 0
-        if n_live == n:
+            return 0
+        full = n_live == n
+        if full:
             ix = flow_ix
-            s = self.src[i0:i1 + 1] if contig else self.src[flow_ix]
-            d = self.dst[i0:i1 + 1] if contig else self.dst[flow_ix]
         else:
             ix = flow_ix[live]
             rem = rem[live]
-            s = self.src[ix]
-            d = self.dst[ix]
-        dem_out = np.bincount(s, weights=rem, minlength=self.n_ports)
-        dem_in = np.bincount(d, weights=rem, minlength=self.n_ports)
-        used_out = dem_out > 0
-        used_in = dem_in > 0
-        if (res_eg[used_out] <= EPS).any() or (res_in[used_in] <= EPS).any():
-            return 0, 0
-        gamma = max(
-            (dem_out[used_out] / res_eg[used_out]).max(initial=0.0),
-            (dem_in[used_in] / res_in[used_in]).max(initial=0.0))
+        links, cnt = self.row_entries(ix)
+        w = np.repeat(rem, cnt)
+        dem = np.bincount(links, weights=w, minlength=self.n_links)
+        used = dem > 0
+        if (res[used] <= EPS).any():
+            return 0
+        gamma = (dem[used] / res[used]).max(initial=0.0)
         if gamma <= EPS:
-            return 0, 0
+            return 0
         r = rem / gamma
-        if contig and n_live == n:
+        if contig and full:
             rates[i0:i1 + 1] += r
         else:
             rates[ix] += r
-        res_eg -= np.bincount(s, weights=r, minlength=self.n_ports)
-        res_in -= np.bincount(d, weights=r, minlength=self.n_ports)
-        np.clip(res_eg, 0.0, None, out=res_eg)
-        np.clip(res_in, 0.0, None, out=res_in)
-        sat_out = sat_in = 0
-        for p in np.nonzero(used_out & (res_eg <= EPS))[0].tolist():
-            sat_out |= 1 << p
-        for p in np.nonzero(used_in & (res_in <= EPS))[0].tolist():
-            sat_in |= 1 << p
-        return sat_out, sat_in
+        res -= np.bincount(links, weights=np.repeat(r, cnt),
+                           minlength=self.n_links)
+        np.clip(res, 0.0, None, out=res)
+        sat = 0
+        for link in np.nonzero(used & (res <= EPS))[0].tolist():
+            sat |= 1 << link
+        return sat
 
-    def _madd_small(self, flow_ix: np.ndarray, res_eg: np.ndarray,
-                    res_in: np.ndarray, rates: np.ndarray) -> tuple[int, int]:
+    def _madd_small(self, flow_ix: np.ndarray, res: np.ndarray,
+                    rates: np.ndarray) -> int:
         """Scalar MADD for small groups — bit-identical to the vectorized
-        path (per-port accumulation in flow order == bincount; x-0 and
+        path (per-link accumulation in flow order == bincount; x-0 and
         single-element clips are exact)."""
         ix_l = flow_ix.tolist()
         rem_l = self.rem[flow_ix].tolist()
-        src_l = self.src[flow_ix].tolist()
-        dst_l = self.dst[flow_ix].tolist()
-        dem_out: dict[int, float] = {}
-        dem_in: dict[int, float] = {}
+        if self.uniform2:
+            nh = self.n_hosts
+            rows = list(zip(self.src[flow_ix].tolist(),
+                            (self.dst[flow_ix] + nh).tolist()))
+        else:
+            lp = self.lp
+            li = self.li
+            rows = [li[lp[i]:lp[i + 1]].tolist() for i in ix_l]
+        dem: dict[int, float] = {}
         live: list[int] = []
         for k, r in enumerate(rem_l):
             if r > EPS:
                 live.append(k)
-                p = src_l[k]
-                dem_out[p] = dem_out.get(p, 0.0) + r
-                q = dst_l[k]
-                dem_in[q] = dem_in.get(q, 0.0) + r
+                for link in rows[k]:
+                    dem[link] = dem.get(link, 0.0) + r
         if not live:
-            return 0, 0
+            return 0
         gamma = 0.0
-        for p, dem in dem_out.items():
-            cap = res_eg[p]
+        for link, d in dem.items():
+            cap = res[link]
             if cap <= EPS:
-                return 0, 0
-            g = dem / cap
-            if g > gamma:
-                gamma = g
-        for q, dem in dem_in.items():
-            cap = res_in[q]
-            if cap <= EPS:
-                return 0, 0
-            g = dem / cap
+                return 0
+            g = d / cap
             if g > gamma:
                 gamma = g
         if gamma <= EPS:
-            return 0, 0
-        grant_out: dict[int, float] = {}
-        grant_in: dict[int, float] = {}
+            return 0
+        grant: dict[int, float] = {}
         for k in live:
             rr = rem_l[k] / gamma
             rates[ix_l[k]] += rr
-            p = src_l[k]
-            grant_out[p] = grant_out.get(p, 0.0) + rr
-            q = dst_l[k]
-            grant_in[q] = grant_in.get(q, 0.0) + rr
-        sat_out = sat_in = 0
-        for p, g in grant_out.items():
-            v = res_eg[p] - g
+            for link in rows[k]:
+                grant[link] = grant.get(link, 0.0) + rr
+        sat = 0
+        for link, g in grant.items():
+            v = res[link] - g
             if v < 0.0:
                 v = 0.0
-            res_eg[p] = v
+            res[link] = v
             if v <= EPS:
-                sat_out |= 1 << p
-        for q, g in grant_in.items():
-            v = res_in[q] - g
-            if v < 0.0:
-                v = 0.0
-            res_in[q] = v
-            if v <= EPS:
-                sat_in |= 1 << q
-        return sat_out, sat_in
+                sat |= 1 << link
+        return sat
 
     # ------------------------------------------------ frozen old primitives
     # Verbatim pre-ISSUE-3 implementations, used only when
@@ -433,42 +498,52 @@ class SchedView:
                 eg[src[i]] -= h
                 ing[dst[i]] -= h
 
-    def backfill(self, ordered_ix: np.ndarray, res_eg: np.ndarray,
-                 res_in: np.ndarray, rates: np.ndarray) -> None:
+    def backfill(self, ordered_ix: np.ndarray, res: np.ndarray,
+                 rates: np.ndarray) -> None:
         """Work-conserving backfill in priority order.
 
         Exact vectorized form of the sequential per-flow sweep: a grant
-        ``h = min(eg[s], ing[d])`` zeroes the smaller residual, so any
-        later flow on the same (s, d) pair sees ``min = 0`` and can never
-        receive a grant (residuals only shrink).  Only the *first* live
-        flow per port pair is therefore a candidate; the sequential loop
-        runs over those representatives — O(distinct port pairs), not
-        O(flows)."""
+        ``h = min over the flow's links of res`` zeroes the smallest
+        residual on the path, so any later flow on the *identical route*
+        (same ``pathid``) sees ``min = 0`` and can never receive a grant
+        (residuals only shrink).  Only the *first* live flow per distinct
+        route is therefore a candidate; the sequential loop runs over
+        those representatives — O(distinct routes), not O(flows)."""
         if ordered_ix.size == 0:
             return
         rem = self.rem
-        src = self.src
-        dst = self.dst
         live = ordered_ix[rem[ordered_ix] > EPS]
         if live.size == 0:
             return
-        pair = src[live].astype(np.int64) * np.int64(self.n_ports) + dst[live]
-        _, first = np.unique(pair, return_index=True)
+        _, first = np.unique(self.pathid[live], return_index=True)
         reps = live[np.sort(first)]
-        eg = res_eg  # local aliases; mutate in place
-        ing = res_in
+        li = self.li
+        if self.uniform2:
+            src = self.src
+            dst = self.dst
+            nh = self.n_hosts
+            for i in reps:
+                a = src[i]
+                b = nh + dst[i]
+                h = res[a]
+                hb = res[b]
+                if hb < h:
+                    h = hb
+                if h > EPS:
+                    rates[i] += h
+                    res[a] -= h
+                    res[b] -= h
+            return
+        lp = self.lp
         for i in reps:
-            h = eg[src[i]]
-            hi = ing[dst[i]]
-            if hi < h:
-                h = hi
+            row = li[lp[i]:lp[i + 1]]
+            h = float(res[row].min())
             if h > EPS:
                 rates[i] += h
-                eg[src[i]] -= h
-                ing[dst[i]] -= h
+                res[row] -= h
 
     def bottleneck_time(self, flow_ix: np.ndarray) -> float:
-        """Varys' effective bottleneck on full port capacities (SEBF key).
+        """Varys' effective bottleneck on full link capacities (SEBF key).
         ``flow_ix`` indexes the view's flow arrays."""
         rem = self.rem[flow_ix]
         live = rem > EPS
@@ -476,16 +551,15 @@ class SchedView:
             return 0.0
         ix = flow_ix[live]
         rem = rem[live]
-        dem_out = np.bincount(self.src[ix], weights=rem, minlength=self.n_ports)
-        dem_in = np.bincount(self.dst[ix], weights=rem, minlength=self.n_ports)
-        return self._bottleneck_from_dems(dem_out, dem_in)
+        links, cnt = self.row_entries(ix)
+        dem = np.bincount(links, weights=np.repeat(rem, cnt),
+                          minlength=self.n_links)
+        return self._bottleneck_from_dems(dem)
 
-    def _bottleneck_from_dems(self, dem_out: np.ndarray,
-                              dem_in: np.ndarray) -> float:
+    def _bottleneck_from_dems(self, dem: np.ndarray) -> float:
         with np.errstate(divide="ignore", invalid="ignore"):
-            g_out = np.where(dem_out > 0, dem_out / self.egress, 0.0)
-            g_in = np.where(dem_in > 0, dem_in / self.ingress, 0.0)
-        return float(max(g_out.max(initial=0.0), g_in.max(initial=0.0)))
+            g = np.where(dem > 0, dem / self.link_cap, 0.0)
+        return float(g.max(initial=0.0))
 
     def bottleneck_of(self, rec: ActiveMF) -> float:
         """Effective bottleneck for any record, active or not.  Inactive
@@ -497,10 +571,10 @@ class SchedView:
             if self.mf_rem_frozen[rec.ordinal] == 0.0:
                 return 0.0
             if self.inactive_dems is not None:
-                dem_out, dem_in = self.inactive_dems(rec.ordinal)
-                if dem_out is None:
+                dem = self.inactive_dems(rec.ordinal)
+                if dem is None:
                     return 0.0
-                return self._bottleneck_from_dems(dem_out, dem_in)
+                return self._bottleneck_from_dems(dem)
         return self.bottleneck_time(rec.flow_ix)
 
 
@@ -537,6 +611,13 @@ class Simulator:
         self._mfs: list[ActiveMF] = []          # ordinal -> record
         self._mf_of_job: dict[str, list[int]] = {}
         self._mf_ord: dict[tuple[str, str], int] = {}  # (job, name) -> ordinal
+        # Flow->links incidence (CSR) + per-flow route id, resolved once
+        # against the topology's deterministic routing.
+        topo = self.fabric.topology
+        lp: list[int] = [0]
+        li: list[int] = []
+        pathid: list[int] = []
+        route_ids: dict[tuple[int, int], int] = {}
         for j in self.jobs:
             for p in j.ports_used():
                 if not (0 <= p < self.fabric.n_ports):
@@ -550,6 +631,10 @@ class Simulator:
                     src.append(f.src)
                     dst.append(f.dst)
                     rem.append(f.remaining)
+                    li.extend(topo.path(f.src, f.dst))
+                    lp.append(len(li))
+                    pathid.append(route_ids.setdefault((f.src, f.dst),
+                                                       len(route_ids)))
                 ix = np.arange(start, len(src), dtype=np.int64)
                 rec = ActiveMF(job=j, mf=mf, name=name,
                                ordinal=len(self._mfs), flow_ix=ix,
@@ -564,6 +649,12 @@ class Simulator:
         self._src = np.asarray(src, dtype=np.int32)
         self._dst = np.asarray(dst, dtype=np.int32)
         self._rem = np.asarray(rem, dtype=np.float64)
+        self._lp = np.asarray(lp, dtype=np.int64)
+        self._li = np.asarray(li, dtype=np.int32)
+        self._pathid = np.asarray(pathid, dtype=np.int64)
+        # Degenerate all-paths-are-(up, down) layout (any big switch):
+        # the hot paths then read link ids straight off src/dst.
+        self._uniform2 = bool(np.all(np.diff(self._lp) == 2))
         self._flow_done = self._rem <= EPS
         # Per-metaflow outstanding-flow counters.
         self._mf_live = np.array([int((~self._flow_done[m.flow_ix]).sum())
@@ -579,23 +670,30 @@ class Simulator:
         self._dems_cache: dict[int, tuple] = {}
 
     def _inactive_dems(self, ordinal: int):
-        """(dem_out, dem_in) dense per-port demand vectors of an inactive,
-        unfinished metaflow — computed once (the flows are untouched until
-        activation, and the cache is never read after finish)."""
-        hit = self._dems_cache.get(ordinal)
-        if hit is None:
+        """Dense per-link demand vector of an inactive, unfinished
+        metaflow (None when fully drained) — computed once (the flows are
+        untouched until activation, and the cache is never read after
+        finish)."""
+        hit = self._dems_cache.get(ordinal, _MISS)
+        if hit is _MISS:
             ix = self._mfs[ordinal].flow_ix
             rem = self._rem[ix]
             live = rem > EPS
             if not live.any():
-                hit = (None, None)
+                hit = None
             else:
                 ix = ix[live]
                 rem = rem[live]
-                hit = (np.bincount(self._src[ix], weights=rem,
-                                   minlength=self.fabric.n_ports),
-                       np.bincount(self._dst[ix], weights=rem,
-                                   minlength=self.fabric.n_ports))
+                if self._uniform2:
+                    links = np.empty(2 * ix.size, dtype=np.int32)
+                    links[0::2] = self._src[ix]
+                    links[1::2] = self._dst[ix] + self.fabric.n_ports
+                    w = np.repeat(rem, 2)
+                else:
+                    links, cnt = _csr_gather(self._lp, self._li, ix)
+                    w = np.repeat(rem, cnt)
+                hit = np.bincount(links, weights=w,
+                                  minlength=self.fabric.n_links)
             self._dems_cache[ordinal] = hit
         return hit
 
@@ -661,7 +759,26 @@ class Simulator:
             mf_rem_frozen=self._mf_frozen,
             inactive_dems=self._inactive_dems,
             mf_rem_cache=mf_rem_cache, bitrem_cache=bitrem_cache,
-            attr_cache=attr_cache, job_scratch=job_scratch)
+            attr_cache=attr_cache, job_scratch=job_scratch,
+            link_cap=self.fabric.cap.copy(),
+            n_links=self.fabric.n_links, n_hosts=self.fabric.n_ports,
+            lp=np.zeros(1, dtype=np.int64), li=np.empty(0, dtype=np.int32),
+            pathid=np.empty(0, dtype=np.int64), uniform2=self._uniform2,
+            link_names=self.fabric.topology.link_names)
+
+        def rebuild_links() -> None:
+            """Re-derive the compacted flow->links CSR from ``c_glob`` —
+            both rebuild paths leave it current, so one gather covers
+            pure activations and compressions alike."""
+            if self._uniform2:
+                view.li = self._li.reshape(-1, 2)[c_glob].ravel()
+                view.lp = np.arange(c_glob.size + 1, dtype=np.int64) * 2
+            else:
+                view.li, cnt = _csr_gather(self._lp, self._li, c_glob)
+                lp_new = np.zeros(c_glob.size + 1, dtype=np.int64)
+                np.cumsum(cnt, out=lp_new[1:])
+                view.lp = lp_new
+            view.pathid = self._pathid[c_glob]
         # First-service bookkeeping for SimResult.mf_service_order.
         unserved: set[int] = set()
         service_order: list[tuple[str, str]] = []
@@ -706,6 +823,7 @@ class Simulator:
                 view.rem = c_rem
                 view.active = view.active + compact_added
                 compact_added.clear()
+                rebuild_links()
                 return
             compact_added.clear()
             recs = list(active.values())
@@ -757,6 +875,7 @@ class Simulator:
             view.dst = c_dst
             view.rem = c_rem
             view.active = recs
+            rebuild_links()
 
         def node_finished(job: JobDAG, name: str) -> None:
             """Cascade a node completion through the frontier."""
@@ -893,7 +1012,7 @@ class Simulator:
                     sched_refresh += 1
                 rates = decision.rates
                 if self.debug_checks:
-                    self._check_capacity(rates, c_src, c_dst, view)
+                    self._check_capacity(rates, view)
                 if unserved:
                     record_service(decision, rates)
             else:
@@ -950,6 +1069,7 @@ class Simulator:
                     self.fabric.degrade(p.port, p.factor)
                 view.egress = np.asarray(self.fabric.egress, dtype=np.float64)
                 view.ingress = np.asarray(self.fabric.ingress, dtype=np.float64)
+                view.link_cap = self.fabric.cap.copy()
                 job_scratch.clear()     # capacity-dependent keys everywhere
                 sched.on_perturbation(p)
                 dirty = True
@@ -966,7 +1086,7 @@ class Simulator:
                                                        return_counts=True)):
                         self._mf_live[ordinal] -= cnt
                         rec = self._mfs[ordinal]
-                        rec.pm_out = rec.pm_in = None   # live-port set shrank
+                        rec.pm = None   # live-link set shrank
                         last_flow[rec.job.name] = t
                         if self._mf_live[ordinal] == 0 and ordinal in active:
                             finish_metaflow(rec)
@@ -1009,28 +1129,41 @@ class Simulator:
                          mf_service_order=service_order)
 
     @staticmethod
-    def _check_capacity(rates: np.ndarray, src: np.ndarray, dst: np.ndarray,
-                        view: SchedView) -> None:
-        """Invariant: the policy never oversubscribes a port.  Debug-only
-        (``debug_checks=True``): two O(flows) bincounts per event, which the
-        compacted hot path exists to avoid."""
-        out = np.bincount(src, weights=rates, minlength=view.n_ports)
-        inn = np.bincount(dst, weights=rates, minlength=view.n_ports)
-        if (out > view.egress + 1e-6).any() or (inn > view.ingress + 1e-6).any():
-            bad = np.nonzero((out > view.egress + 1e-6)
-                             | (inn > view.ingress + 1e-6))[0]
-            raise AssertionError(f"port(s) {bad.tolist()} oversubscribed")
+    def _check_capacity(rates: np.ndarray, view: SchedView) -> None:
+        """Invariant: the policy never oversubscribes a link.  Debug-only
+        (``debug_checks=True``): an O(path entries) bincount per event,
+        which the compacted hot path exists to avoid."""
+        cnt = np.diff(view.lp)
+        load = np.bincount(view.li, weights=np.repeat(rates, cnt),
+                           minlength=view.n_links)
+        over = load > view.link_cap + 1e-6
+        if over.any():
+            bad = np.nonzero(over)[0].tolist()
+            names = ([view.link_names[b] for b in bad]
+                     if view.link_names else bad)
+            raise AssertionError(f"link(s) {names} oversubscribed")
 
 
 def simulate(jobs: list[JobDAG], scheduler, n_ports: int | None = None,
-             fabric: Fabric | None = None, **kw) -> SimResult:
+             fabric: Fabric | None = None, topology: Topology | None = None,
+             **kw) -> SimResult:
     """Convenience wrapper: fresh fabric, run to completion.
+
+    ``topology`` builds the fabric over any :class:`Topology`; passing
+    it together with ``fabric`` raises (silently preferring one would
+    quietly measure the wrong network).
 
     Note: mutates the given job objects (remaining sizes, finish times);
     build fresh jobs per run when comparing schedulers.
     """
+    if fabric is not None and topology is not None:
+        raise ValueError("pass either fabric or topology, not both")
     if fabric is None:
-        if n_ports is None:
-            n_ports = max(max(j.ports_used(), default=0) for j in jobs) + 1
-        fabric = Fabric(n_ports=n_ports)
+        if topology is not None:
+            fabric = Fabric(topology=topology)
+        else:
+            if n_ports is None:
+                n_ports = max(max(j.ports_used(), default=0)
+                              for j in jobs) + 1
+            fabric = Fabric(n_ports=n_ports)
     return Simulator(fabric, jobs, scheduler, **kw).run()

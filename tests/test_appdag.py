@@ -227,10 +227,13 @@ class TestMixer:
         assert bal.metaflows["m"].flows[0].size == pytest.approx(10.0)
 
     @pytest.mark.parametrize("scen", ["dense_dp", "moe_ep", "pipe_serve",
-                                      "mixed"])
+                                      "mixed", "mixed_oversub_3to1"])
     def test_scenarios_simulate_end_to_end(self, scen):
-        n_ports, jobs = build_scenario(scen, seed=0, quick=True)
-        res = simulate(jobs, make_scheduler("msa"), n_ports=n_ports)
+        fabric, jobs = build_scenario(scen, seed=0, quick=True)
+        if scen == "mixed_oversub_3to1":     # the new default topology axis
+            assert fabric.topology.kind == "leaf_spine"
+        res = simulate(jobs, make_scheduler("msa"), fabric=fabric,
+                       debug_checks=True)
         assert len(res.jct) == len(jobs)
         assert all(v > 0 for v in res.jct.values())
         assert all(res.cct[j] <= res.jct[j] + 1e-9 for j in res.jct)

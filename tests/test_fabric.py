@@ -1,8 +1,12 @@
-"""Fabric capacity management: degrade validation + restore inverse."""
+"""Fabric layer: degrade/restore validation, topology builders, routing
+determinism, and the link-vector Residual/backfill arithmetic."""
 
 import pytest
 
-from repro.core import Fabric, JobDAG, Perturbation, make_scheduler, simulate
+from repro.core import (Fabric, JobDAG, Perturbation, big_switch, fat_tree,
+                        leaf_spine, make_scheduler, make_topology, simulate)
+from repro.core.fabric import Residual, backfill
+from repro.core.metaflow import EPS, Flow
 
 
 def test_degrade_rejects_non_positive_factors():
@@ -25,6 +29,37 @@ def test_restore_inverts_degrade():
     assert fab.egress == [2.0, 4.0, 8.0] and fab.ingress == [1.0, 1.0, 3.0]
 
 
+def test_degrade_restore_reject_out_of_range_targets():
+    """Out-of-range ports/links raise ValueError (not IndexError, and
+    never a silent negative-index hit on a different resource)."""
+    fab = Fabric(n_ports=3)
+    for bad in (-1, 3, 99):
+        with pytest.raises(ValueError, match="outside fabric"):
+            fab.degrade(bad, 0.5)
+        with pytest.raises(ValueError, match="outside fabric"):
+            fab.restore(bad)
+    for bad in (-1, fab.n_links, 1000):
+        with pytest.raises(ValueError, match="outside fabric"):
+            fab.degrade_link(bad, 0.5)
+        with pytest.raises(ValueError, match="outside fabric"):
+            fab.restore_link(bad)
+    assert fab.egress == [1.0, 1.0, 1.0]    # untouched after rejections
+    assert fab.ingress == [1.0, 1.0, 1.0]
+
+
+def test_degrade_scales_host_links_on_leaf_spine():
+    fab = Fabric(topology=leaf_spine(2, 4, oversubscription=2.0, n_spines=1))
+    fab.degrade(3, 0.5)
+    assert fab.egress[3] == 0.5 and fab.ingress[3] == 0.5
+    up0 = fab.cap[2 * fab.n_ports]          # leaf0 uplink untouched
+    fab.degrade_link(2 * fab.n_ports, 0.25)
+    assert fab.cap[2 * fab.n_ports] == pytest.approx(up0 * 0.25)
+    fab.restore(3)
+    assert fab.egress[3] == 1.0
+    fab.restore_link(2 * fab.n_ports)
+    assert fab.cap[2 * fab.n_ports] == pytest.approx(up0)
+
+
 def test_transient_straggler_arithmetic():
     """degrade at t=1 (x0.5), restore at t=2: a 4-unit flow on a unit port
     transfers 1 + 0.5 by t=2 and the remaining 2.5 at full rate — finish
@@ -37,3 +72,103 @@ def test_transient_straggler_arithmetic():
                                   Perturbation(time=2.0, port=1,
                                                factor=None)])
     assert res.mf_finish[("j", "m")] == pytest.approx(4.5)
+
+
+class TestTopologyBuilders:
+    def test_big_switch_is_the_degenerate_two_link_case(self):
+        topo = big_switch(4)
+        assert topo.n_links == 8
+        for s in range(4):
+            for d in range(4):
+                assert topo.path(s, d) == (s, 4 + d)
+        # Fabric(n_ports=N) builds exactly this topology.
+        assert Fabric(n_ports=4).topology.kind == "big_switch"
+
+    def test_big_switch_custom_caps(self):
+        fab = Fabric(topology=big_switch(2, egress=[2.0, 3.0],
+                                         ingress=[1.0, 4.0]))
+        assert fab.egress == [2.0, 3.0] and fab.ingress == [1.0, 4.0]
+
+    def test_leaf_spine_structure_and_caps(self):
+        topo = leaf_spine(3, 4, oversubscription=2.0, n_spines=2)
+        assert topo.n_ports == 12
+        # 24 host links + 3 leaves * 2 spines * 2 directions core links.
+        assert topo.n_links == 24 + 12
+        # Each leaf's total uplink capacity = hosts_per_leaf / oversub.
+        up = topo.cap[24:24 + 6]
+        assert up.sum() == pytest.approx(3 * 4 / 2.0)
+        # Intra-leaf: host links only; cross-leaf: 4 links via one spine.
+        assert topo.path(0, 3) == (0, 12 + 3)
+        p = topo.path(0, 5)
+        assert len(p) == 4 and p[0] == 0 and p[-1] == 12 + 5
+        assert all(link >= 24 for link in p[1:3])
+
+    def test_leaf_spine_routing_is_deterministic(self):
+        a = leaf_spine(4, 8, oversubscription=3.0)
+        b = leaf_spine(4, 8, oversubscription=3.0)
+        for s in range(0, 32, 3):
+            for d in range(1, 32, 5):
+                assert a.path(s, d) == b.path(s, d)
+
+    def test_fat_tree_structure(self):
+        topo = fat_tree(4)
+        assert topo.n_ports == 16
+        assert topo.n_links == 96          # 6 * k^3/4 directed cables
+        assert topo.path(0, 1) == (0, 16 + 1)          # same edge switch
+        same_pod = topo.path(0, 2)                     # edge -> agg -> edge
+        assert len(same_pod) == 4
+        cross_pod = topo.path(0, 15)                   # via core
+        assert len(cross_pod) == 6
+        assert cross_pod[0] == 0 and cross_pod[-1] == 16 + 15
+        with pytest.raises(ValueError, match="even"):
+            fat_tree(3)
+
+    def test_make_topology_specs(self):
+        assert make_topology("big_switch", 24).kind == "big_switch"
+        ls = make_topology("leaf_spine_3to1", 24)
+        assert ls.kind == "leaf_spine" and ls.n_ports >= 24
+        assert ls.oversubscription == 3.0
+        ft = make_topology("fat_tree", 24)
+        assert ft.kind == "fat_tree" and ft.n_ports >= 24
+        with pytest.raises(ValueError, match="unknown topology"):
+            make_topology("torus", 8)
+
+    def test_path_validates_ports(self):
+        with pytest.raises(ValueError, match="outside"):
+            big_switch(4).path(0, 7)
+
+
+class TestResidualLinks:
+    def test_big_switch_form_unchanged(self):
+        r = Residual(eg=[1.0, 2.0], ing=[3.0, 0.5])
+        f = Flow(src=1, dst=1, size=5.0)
+        assert r.headroom(f) == 0.5
+        r.take(f, 0.5)
+        assert r.headroom(f) == 0.0
+        assert r.cap[1] == pytest.approx(1.5)   # egress side also deducted
+
+    def test_leaf_spine_uplink_bounds_headroom(self):
+        fab = Fabric(topology=leaf_spine(2, 4, oversubscription=4.0,
+                                         n_spines=1))
+        r = fab.residual()
+        cross = Flow(src=0, dst=5, size=1.0)     # leaf0 -> leaf1
+        assert r.headroom(cross) == pytest.approx(1.0)  # NIC still binds
+        r.take(cross, 1.0)
+        # Leaf0's 1-unit uplink is now exhausted for every cross flow.
+        assert r.headroom(Flow(src=1, dst=6, size=1.0)) == 0.0
+        # Intra-leaf flows never touch the uplink.
+        assert r.headroom(Flow(src=1, dst=2, size=1.0)) == pytest.approx(1.0)
+
+    def test_backfill_skips_sub_eps_headroom_without_drift(self):
+        """Repeated backfill rounds against sub-EPS residuals must grant
+        nothing and leave the residual bit-stable (no negative-clamp
+        drift accumulating over long runs)."""
+        r = Residual(eg=[EPS / 2, 1.0], ing=[1.0, EPS / 2])
+        flows = [Flow(src=0, dst=0, size=9.0), Flow(src=1, dst=1, size=9.0)]
+        rates: dict[int, float] = {}
+        snapshot = list(r.cap)
+        for _ in range(1000):
+            backfill(flows, rates, r)
+        assert rates == {}                       # nothing granted
+        assert r.cap == snapshot                 # bit-stable, no drift
+        assert min(r.cap) >= 0.0

@@ -197,7 +197,8 @@ class TestMaddPaths:
             egress=np.array(eg), ingress=np.array(ing),
             active=[], jobs=[], mf_records={})
         rates = np.zeros(n_flows)
-        view.madd(ix, np.array(eg), np.array(ing), rates)  # n<=16 -> scalar
+        # Residual over the derived big-switch links: eg ++ ing.
+        view.madd(ix, np.concatenate([eg, ing]), rates)  # n<=16 -> scalar
 
         for k, f in enumerate(flows):
             assert rates[k] == pytest.approx(ref.get(f.id, 0.0), abs=1e-12)
@@ -211,8 +212,8 @@ class TestMaddPaths:
             egress=np.array(eg), ingress=np.array(ing),
             active=[], jobs=[], mf_records={})
         view2.rem[1::2] = 0.0           # duplicates dead: same live set
-        view2.madd(np.arange(0, 2 * n_flows, 2), np.array(eg),
-                   np.array(ing), wide)
+        view2.madd(np.arange(0, 2 * n_flows, 2),
+                   np.concatenate([eg, ing]), wide)
         for k, f in enumerate(flows):
             assert wide[2 * k] == pytest.approx(ref.get(f.id, 0.0),
                                                 abs=1e-12)
