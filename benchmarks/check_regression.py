@@ -1,0 +1,108 @@
+"""CI regression gate: fresh perf-smoke JSON vs the committed baseline.
+
+Compares the ``perf_sim_core.py --smoke`` output row-by-row against
+``benchmarks/baselines/sim_core_smoke.json`` and **fails the build**
+(exit 1) on drift, instead of only uploading artifacts:
+
+  * the row set — every (core, policy, jobs, topology) cell present in
+    the baseline must be measured, and nothing extra;
+  * ``avg_jct`` must be **bit-equal** per row: the simulator is
+    deterministic, so any difference is a semantic change to the core
+    or a policy, which must land as a deliberate baseline update;
+  * total wall clock must not regress beyond ``--wall-tol`` (default
+    25%).  Only slowdowns fail — a faster runner class passes — and the
+    totals are compared (per-row smoke walls are milliseconds of noise).
+
+``--update`` rewrites the baseline from the fresh run (commit the diff
+deliberately); the wall half then re-baselines to the machine that ran
+it, so refresh from the slowest runner class CI uses.
+
+Usage:
+  PYTHONPATH=src python benchmarks/check_regression.py --fresh PATH
+      [--baseline benchmarks/baselines/sim_core_smoke.json]
+      [--wall-tol 0.25] [--update]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baselines/sim_core_smoke.json"
+
+
+def row_key(row: dict) -> tuple:
+    return (row["core"], row["policy"], row["jobs"], row["topology"])
+
+
+def compare(fresh: dict, baseline: dict, wall_tol: float) -> list[str]:
+    errs: list[str] = []
+    f_rows = {row_key(r): r for r in fresh.get("rows", ())}
+    b_rows = {row_key(r): r for r in baseline.get("rows", ())}
+    for key in sorted(b_rows.keys() - f_rows.keys()):
+        errs.append(f"row missing from fresh run: {key}")
+    for key in sorted(f_rows.keys() - b_rows.keys()):
+        errs.append(f"unexpected new row (update the baseline): {key}")
+    for key in sorted(f_rows.keys() & b_rows.keys()):
+        f, b = f_rows[key], b_rows[key]
+        if f["avg_jct"] != b["avg_jct"]:
+            msg = (
+                f"{key}: avg_jct drifted {b['avg_jct']!r} -> {f['avg_jct']!r} "
+                "(must be bit-equal; if deliberate, refresh with --update)"
+            )
+            errs.append(msg)
+    f_wall = sum(r["wall_s"] for r in fresh.get("rows", ()))
+    b_wall = sum(r["wall_s"] for r in baseline.get("rows", ()))
+    if b_wall > 0 and f_wall > b_wall * (1.0 + wall_tol):
+        msg = (
+            f"wall-clock regression: total {f_wall:.3f}s vs baseline "
+            f"{b_wall:.3f}s (> {wall_tol:.0%} tolerance)"
+        )
+        errs.append(msg)
+    return errs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--fresh",
+        required=True,
+        help="JSON emitted by perf_sim_core.py --smoke",
+    )
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument(
+        "--wall-tol",
+        type=float,
+        default=0.25,
+        help="allowed total wall-clock slowdown (default 0.25)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the fresh run",
+    )
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline updated: {args.fresh} -> {args.baseline}")
+        return
+
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    errs = compare(fresh, baseline, args.wall_tol)
+    for e in errs:
+        print(f"CHECK-FAIL[regression]: {e}", file=sys.stderr)
+    if errs:
+        sys.exit(1)
+    n_rows = len(fresh.get("rows", ()))
+    tol = f"{args.wall_tol:.0%}"
+    print(f"gate clean: {n_rows} rows avg_jct bit-equal, wall within {tol}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,11 +22,9 @@ verified to never oversubscribe any link of the routed topology):
 
 from __future__ import annotations
 
-import time
-
-from repro.appdag import SCENARIOS, build_scenario
-from repro.appdag.mixer import SCENARIO_TOPOLOGY
-from repro.core import available_policies, make_scheduler, simulate
+from repro.appdag import SCENARIOS
+from repro.core import available_policies
+from repro.experiments import scenario_rows, topology_arg
 
 DEFAULT_POLICIES = ("msa", "varys", "fifo", "fair", "cpath")
 
@@ -36,35 +34,10 @@ def run(quick: bool = False, policies=None, seed: int = 0,
     if topology == "big_switch":
         topology = None   # explicit default: same rows/gates as no flag
     policies = tuple(policies) if policies else DEFAULT_POLICIES
-    rows = []
-    for scen in SCENARIOS:
-        t0 = time.perf_counter()
-        cells = []
-        for pname in policies:
-            fabric, jobs = build_scenario(scen, seed=seed, quick=quick,
-                                          topology=topology)
-            res = simulate(jobs, make_scheduler(pname), fabric=fabric)
-            if len(res.jct) != len(jobs):
-                raise AssertionError(
-                    f"{scen}/{pname}: {len(res.jct)} JCTs for "
-                    f"{len(jobs)} jobs")
-            cells.append((pname, res.avg_jct, res.avg_cct))
-        us = (time.perf_counter() - t0) * 1e6
-        derived = ";".join(f"{p}={j:.3f}/{c:.3f}" for p, j, c in cells)
-        jct = {p: j for p, j, _ in cells}
-        if "msa" in jct:
-            for p in ("fifo", "fair"):
-                if p in jct:
-                    derived += f";{p}_over_msa={jct[p] / jct['msa']:.3f}"
-        # Rows running on any non-big-switch network carry it as an
-        # ``@spec`` suffix — whether overridden or the scenario's own
-        # default — so JSON trajectories are tagged accurately per row.
-        spec = topology or SCENARIO_TOPOLOGY.get(scen)
-        if spec == "big_switch":   # forced back to the paper fabric
-            spec = None
-        name = f"ml/{scen}" if spec is None else f"ml/{scen}@{spec}"
-        rows.append((name, us, derived))
-    return rows
+    # Row emission is the shared, seed-threaded helper the experiment
+    # harness also builds on — one definition of what a cell measures.
+    return scenario_rows(tuple(SCENARIOS), policies, seed=seed,
+                         quick=quick, topology=topology)
 
 
 def check(rows) -> list[str]:
@@ -98,6 +71,9 @@ def check(rows) -> list[str]:
 def main() -> None:
     import argparse
 
+    from repro.appdag import build_scenario
+    from repro.experiments import Cell, resolve_topology, run_cell
+
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--policy", action="append", default=None,
                     choices=available_policies(), metavar="NAME",
@@ -107,6 +83,7 @@ def main() -> None:
                     choices=sorted(SCENARIOS), metavar="NAME",
                     help="scenario to run (repeatable; default: all)")
     ap.add_argument("--topology", default=None, metavar="SPEC",
+                    type=topology_arg,
                     help="network topology override (big_switch, "
                          "leaf_spine_<R>to1, fat_tree; default: each "
                          "scenario's registered topology)")
@@ -123,12 +100,14 @@ def main() -> None:
               f"jobs, {sum(len(j.metaflows) for j in jobs)} metaflows) ==")
         print(f"  {'policy':<8} {'avg JCT':>12} {'avg CCT':>12}")
         for pname in policies:
-            fabric, jobs = build_scenario(scen, seed=args.seed,
-                                          quick=args.quick,
-                                          topology=args.topology)
-            res = simulate(jobs, make_scheduler(pname), fabric=fabric,
-                           debug_checks=True)
-            print(f"  {pname:<8} {res.avg_jct:>12.3f} {res.avg_cct:>12.3f}")
+            rec = run_cell(Cell(scenario=scen, policy=pname,
+                                topology=resolve_topology(scen,
+                                                          args.topology),
+                                seed=args.seed),
+                           quick=args.quick, debug_checks=True)
+            r = rec["result"]
+            print(f"  {pname:<8} {r['avg_jct']:>12.3f} "
+                  f"{r['avg_cct']:>12.3f}")
 
 
 if __name__ == "__main__":

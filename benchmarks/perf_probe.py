@@ -11,9 +11,6 @@ one (arch x shape) cell at reduced depth (unrolled).
 
 import argparse
 import re
-from collections import defaultdict
-
-import jax
 
 from repro.configs import get_config, shapes_for
 from repro.launch.dryrun import _compile, _depth_variant

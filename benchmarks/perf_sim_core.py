@@ -39,10 +39,12 @@ import time
 
 import random
 
-from repro.appdag.mixer import _fb_templates, mixed_templates, poisson_mix
-from repro.core import (Fabric, available_policies, make_scheduler,
-                        make_topology, simulate)
+from repro.appdag.mixer import (FB_WIDE_STREAM, _fb_templates,
+                                mixed_templates, poisson_mix)
+from repro.core import (Fabric, RunResult, available_policies,
+                        make_scheduler, make_topology, simulate)
 from repro.core.simref import simulate_reference
+from repro.experiments import topology_arg
 
 N_PORTS = 48
 SIZES = (50, 200, 500, 2000)
@@ -67,7 +69,7 @@ def scale_mixed(n_jobs: int, seed: int = 0, n_ports: int = N_PORTS):
     steady stream, not a burst), random placement."""
     templates = list(mixed_templates(seed))
     train = templates[0].dag
-    rng = random.Random(seed + 101)
+    rng = random.Random(seed + FB_WIDE_STREAM)
     templates += _fb_templates(rng, 2, max_span=n_ports // 2,
                                target_size=train.total_size())
     train_load = train.total_load()
@@ -89,16 +91,11 @@ def _run_one(core: str, pname: str, n_jobs: int, seed: int,
     else:
         res = simulate_reference(jobs, sched, n_ports=n_ports)
     wall = time.perf_counter() - t0
-    if len(res.jct) != n_jobs:
+    rr = RunResult.from_sim(res, wall_s=wall)
+    if rr.n_jobs != n_jobs:
         raise AssertionError(f"{core}/{pname}/{n_jobs}: incomplete run")
-    return {
-        "core": core, "policy": pname, "jobs": n_jobs,
-        "topology": topology,
-        "wall_s": round(wall, 3), "events": res.events,
-        "events_per_s": round(res.events / wall, 1),
-        "sched_full": res.sched_full, "sched_refresh": res.sched_refresh,
-        "avg_jct": res.avg_jct,
-    }
+    return {"core": core, "policy": pname, "jobs": n_jobs,
+            "topology": topology, **rr.perf_row()}
 
 
 def _assert_equivalent(pname: str, n_jobs: int, seed: int) -> None:
@@ -215,6 +212,7 @@ def main() -> None:
                     help="CI profile: tiny sizes, per-link debug checks, "
                          "validate JSON, exit 1 on check failure")
     ap.add_argument("--topology", default="big_switch", metavar="SPEC",
+                    type=topology_arg,
                     help="network topology spec (big_switch, "
                          "leaf_spine_<R>to1, fat_tree); non-big-switch "
                          "sweeps skip the pre-topology reference core")

@@ -18,7 +18,11 @@ a machine-readable JSON document, so harness runs can land as points on
 the perf trajectory next to ``BENCH_sim_core.json``.
 
 Usage: python -m benchmarks.run [--quick] [--only NAME] [--policy NAME ...]
-       [--json PATH]
+       [--json PATH] [--seed N] [--topology SPEC]
+
+``--seed`` threads through every bench whose ``run`` takes one
+(scenario construction is pure in the seed); unknown ``--policy`` /
+``--topology`` values fail fast with the list of valid choices.
 """
 
 from __future__ import annotations
@@ -29,6 +33,7 @@ import json
 import sys
 
 from repro.core.sched import available_policies
+from repro.experiments import topology_arg
 
 from benchmarks import (comm_overlap, fig1_motivation, fig3_topologies,
                         ml_workloads, roofline_table, sched_micro)
@@ -54,9 +59,14 @@ def main() -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows + check failures as JSON")
     ap.add_argument("--topology", metavar="SPEC", default=None,
+                    type=topology_arg,
                     help="network topology override for the benches that "
                          "take one (big_switch, leaf_spine_<R>to1, "
                          "fat_tree); JSON rows are tagged per topology")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="workload seed for the benches that take one "
+                         "(scenario construction is pure in the seed; "
+                         "seed 0 is the pinned gate trajectory)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -69,6 +79,8 @@ def main() -> None:
         params = inspect.signature(mod.run).parameters
         if args.policy and "policies" in params:
             kwargs["policies"] = args.policy
+        if "seed" in params:
+            kwargs["seed"] = args.seed
         takes_topology = "topology" in params
         if args.topology and takes_topology:
             kwargs["topology"] = args.topology

@@ -1,0 +1,226 @@
+"""Monte-Carlo experiment sweep — the repo's figure-reproduction runner.
+
+Compiles a declarative ``repro.experiments.SweepSpec`` (scenarios x
+policies x topologies x N seeds) into shards, executes them
+process-parallel with resumable per-shard JSON outputs (a killed sweep
+re-run with the same spec recomputes only the missing shards), and
+aggregates mean/95%-CI avg-JCT and avg-CCT, normalized-slowdown CDF
+quantiles, and the paper's headline metaflow-vs-coflow ratio (MSA vs
+varys/SEBF avg-JCT on the mixed cluster) into ``BENCH_experiments.json``.
+
+Profiles:
+  (default)  all scenarios x all policies x 20 seeds — the committed
+             ``BENCH_experiments.json`` trajectory (about a minute).
+  --smoke    CI profile: mixed scenario, msa/varys/fair, 3 quick seeds,
+             then validates the aggregate and gates MSA >= varys
+             (exit 1 on any check failure).  Writes
+             ``BENCH_experiments_smoke.json`` so CI runs never clobber
+             the committed full-sweep trajectory.
+
+Usage:
+  PYTHONPATH=src python benchmarks/sweep.py [--smoke]
+      [--scenario NAME ...] [--policy NAME ...] [--topology SPEC ...]
+      [--seeds N] [--seed0 N] [--quick] [--cells-per-shard K]
+      [--workers N] [--shard-dir DIR] [--no-resume]
+      [--stop-after-shards K] [--out PATH]
+
+Unknown ``--scenario`` / ``--policy`` / ``--topology`` values fail fast
+with the list of valid choices.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.appdag import SCENARIOS
+from repro.core import available_policies
+from repro.experiments import SweepSpec, aggregate, check, run_sweep
+from repro.experiments.spec import DEFAULT_TOPOLOGY, validate_topology_spec
+
+FULL_SEEDS = 20
+SMOKE = {
+    "scenarios": ("mixed",),
+    "policies": ("msa", "varys", "fair"),
+    "n_seeds": 3,
+    "quick": True,
+    "cells_per_shard": 3,
+}
+
+
+def _topology_list_arg(spec: str) -> str:
+    """Like ``repro.experiments.topology_arg`` but also accepting the
+    ``default`` sentinel (= each scenario's registered topology)."""
+    try:
+        return validate_topology_spec(spec, allow_default=True)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+
+
+def build_spec(args) -> SweepSpec:
+    if args.smoke:
+        base = dict(SMOKE)
+    else:
+        base = {
+            "scenarios": tuple(SCENARIOS),
+            "policies": available_policies(),
+            "n_seeds": FULL_SEEDS,
+            "quick": args.quick,
+            "cells_per_shard": 10,
+        }
+    if args.scenario:
+        base["scenarios"] = tuple(args.scenario)
+    if args.policy:
+        base["policies"] = tuple(args.policy)
+    if args.seeds is not None:
+        base["n_seeds"] = args.seeds
+    if args.quick:
+        base["quick"] = True
+    if args.cells_per_shard is not None:
+        base["cells_per_shard"] = args.cells_per_shard
+    topologies = tuple(args.topology or (DEFAULT_TOPOLOGY,))
+    return SweepSpec(topologies=topologies, seed0=args.seed0, **base)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI profile: tiny quick sweep, validated, gated on MSA >= varys",
+    )
+    ap.add_argument(
+        "--scenario",
+        action="append",
+        default=None,
+        choices=sorted(SCENARIOS),
+        metavar="NAME",
+        help="scenario (repeatable; default: the profile's set)",
+    )
+    ap.add_argument(
+        "--policy",
+        action="append",
+        default=None,
+        choices=available_policies(),
+        metavar="NAME",
+        help="policy (repeatable; default: the profile's set)",
+    )
+    ap.add_argument(
+        "--topology",
+        action="append",
+        default=None,
+        metavar="SPEC",
+        type=_topology_list_arg,
+        help="topology (repeatable; 'default' = each scenario's registered "
+        "one; also big_switch, leaf_spine_<R>to1, fat_tree)",
+    )
+    ap.add_argument(
+        "--seeds",
+        type=int,
+        default=None,
+        metavar="N",
+        help=f"seeds per cell (default {FULL_SEEDS}, smoke {SMOKE['n_seeds']})",
+    )
+    ap.add_argument(
+        "--seed0",
+        type=int,
+        default=0,
+        help="first seed (cells use seed0..seed0+N-1)",
+    )
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="quick scenario sizes (fewer jobs per cell)",
+    )
+    ap.add_argument("--cells-per-shard", type=int, default=None)
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=None,
+        help="worker processes (default: cpu count; 1 = in-process)",
+    )
+    ap.add_argument(
+        "--shard-dir",
+        default=None,
+        metavar="DIR",
+        help="resumable per-shard outputs (default .sweep_shards/<spec_hash> "
+        "— hash-scoped, so a changed spec never resumes stale shards)",
+    )
+    ap.add_argument(
+        "--no-resume",
+        action="store_true",
+        help="recompute every shard even if its file exists",
+    )
+    ap.add_argument(
+        "--stop-after-shards",
+        type=int,
+        default=None,
+        metavar="K",
+        help="stop after K newly-computed shards land (simulates a killed "
+        "run; re-invoke without this flag to finish and aggregate)",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        metavar="PATH",
+        help="aggregate JSON (default BENCH_experiments.json; smoke writes "
+        "BENCH_experiments_smoke.json)",
+    )
+    args = ap.parse_args()
+
+    spec = build_spec(args)
+    if args.smoke:
+        default_out = "BENCH_experiments_smoke.json"
+    else:
+        default_out = "BENCH_experiments.json"
+    out = args.out or default_out
+    shard_dir = args.shard_dir or f".sweep_shards/{spec.spec_hash()}"
+    shards = spec.shards()
+    n_cells = len(spec.cells())
+    print(f"sweep {spec.spec_hash()}: {n_cells} cells in {len(shards)} shards")
+    print(f"shard dir: {shard_dir}")
+
+    t0 = time.perf_counter()
+    docs = run_sweep(
+        spec,
+        shard_dir,
+        workers=args.workers,
+        resume=not args.no_resume,
+        stop_after=args.stop_after_shards,
+        progress=lambda m: print(f"  {m}", flush=True),
+    )
+    wall = time.perf_counter() - t0
+    if len(docs) < len(shards):
+        print(f"stopped with {len(docs)}/{len(shards)} shards on disk ({wall:.1f}s)")
+        print("re-run the same command to finish the sweep")
+        return
+
+    doc = aggregate(spec, docs)
+    with open(out, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True, allow_nan=False)
+        fh.write("\n")
+    print(f"wrote {out} ({doc['n_cells']} cells, {wall:.1f}s wall)")
+
+    head = doc["headline"]
+    if head is not None:
+        r = head["ratio"]
+        ci = "n/a (1 seed)" if r["ci95"] is None else f"+/- {r['ci95']:.3f}"
+        msg = (
+            f"headline {head['policy']}-vs-{head['baseline']} avg-JCT ratio "
+            f"on {head['scenario']}: {r['mean']:.3f} {ci} "
+            f"(95% CI, {r['n']} seeds)"
+        )
+        print(msg)
+
+    with open(out) as fh:  # validate what actually landed on disk
+        errs = check(json.load(fh))
+    for e in errs:
+        print(f"CHECK-FAIL[experiments]: {e}", file=sys.stderr)
+    if errs:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

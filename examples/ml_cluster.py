@@ -53,7 +53,7 @@ def main() -> None:
           f"on {plan.world} ports")
 
     # 3. Policies head-to-head on the canonical mixed cluster.
-    print(f"\nmixed cluster (training + serving + MapReduce, one fabric):")
+    print("\nmixed cluster (training + serving + MapReduce, one fabric):")
     print(f"  {'policy':<8} {'avg JCT':>10} {'avg CCT':>10}")
     for pname in policies:
         fabric, jobs = build_scenario("mixed", seed=0)

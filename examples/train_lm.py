@@ -38,7 +38,6 @@ if ARGS.dp > 1:
                                f" --xla_force_host_platform_device_count={ARGS.dp}")
 
 import jax                                                     # noqa: E402
-import jax.numpy as jnp                                        # noqa: E402
 import numpy as np                                             # noqa: E402
 from jax.sharding import PartitionSpec as P                    # noqa: E402
 

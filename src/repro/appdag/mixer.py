@@ -16,6 +16,15 @@ fresh job and fabric objects every call (simulation mutates both).  Each
 scenario carries a default network topology in ``SCENARIO_TOPOLOGY``
 (big-switch unless stated); the ``topology`` argument / ``--topology``
 benchmark flag overrides it with any ``repro.core.make_topology`` spec.
+
+Seed discipline (DESIGN.md §12): ``build_scenario(name, seed=s, ...)``
+is a pure function of its arguments — every consumer (single-seed
+benchmark gates, the ``repro.experiments`` Monte-Carlo sweep, ad-hoc
+runs) rebuilding a cell from the same ``(name, seed, quick, topology)``
+gets the bit-identical workload.  Scenario builders that need more than
+one random stream derive them from the base seed by the *named* offsets
+below — never by an inline magic number — so the derivation is explicit
+and stable across refactors.
 """
 
 from __future__ import annotations
@@ -30,6 +39,13 @@ from repro.configs.base import LM_SHAPES
 from repro.core.fabric import Fabric, make_topology
 from repro.core.metaflow import JobDAG
 from repro.core.workload import build_job, synth_fb_coflow
+
+
+# Named seed-stream offsets (see the module docstring).  The values are
+# frozen: changing one silently regenerates every pinned workload (the
+# BENCH_*.json trajectories and the single-seed benchmark gates).
+FB_TEMPLATE_STREAM = 1    # mixed_templates: MapReduce template sampling
+FB_WIDE_STREAM = 101      # perf_sim_core.scale_mixed: wide-tail templates
 
 
 @dataclass(frozen=True)
@@ -54,7 +70,13 @@ class JobTemplate:
 def poisson_mix(templates: list[JobTemplate], n_jobs: int, n_ports: int,
                 mean_interarrival: float, seed: int = 0) -> list[JobDAG]:
     """Sample ``n_jobs`` arrivals: template by weight, Poisson spacing,
-    uniform-random contiguous placement on the fabric."""
+    uniform-random contiguous placement on the fabric.  Pure in
+    ``seed``: the same arguments always produce the same job list."""
+    if n_jobs < 1:
+        raise ValueError(f"n_jobs must be >= 1, got {n_jobs}")
+    if mean_interarrival <= 0:
+        raise ValueError("mean_interarrival must be > 0, got "
+                         f"{mean_interarrival}")
     rng = random.Random(seed)
     weights = [t.weight for t in templates]
     for t in templates:
@@ -166,7 +188,7 @@ def mixed_templates(seed: int = 0) -> list[JobTemplate]:
     serve = comm_balanced(
         pipeline_serve_dag(get_config("llama3-405b"), PlanAxes(pp=4),
                            n_microbatches=4, tokens_per_mb=4096), ratio=0.8)
-    rng = random.Random(seed + 1)
+    rng = random.Random(seed + FB_TEMPLATE_STREAM)
     fb = _fb_templates(rng, 2, max_span=12, target_size=train.total_size())
     return [JobTemplate("train", train, weight=1.0),
             JobTemplate("serve", serve, weight=1.5)] + fb

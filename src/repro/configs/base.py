@@ -9,8 +9,7 @@ package instantiate it with the exact published dimensions plus a reduced
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

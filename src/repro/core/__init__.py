@@ -10,6 +10,7 @@ from repro.core.fabric import (BigSwitch, Fabric, FatTree, LeafSpine,
                                make_topology)
 from repro.core.metaflow import (ComputeTask, Flow, JobDAG, Metaflow,
                                  figure1_jobs, figure2_job)
+from repro.core.results import RunResult
 from repro.core.sched import (CriticalPathScheduler, Decision, FairScheduler,
                               FifoScheduler, MSAScheduler, Scheduler,
                               VarysScheduler, available_policies,
@@ -21,7 +22,8 @@ __all__ = [
     "BigSwitch", "ComputeTask", "CriticalPathScheduler", "Decision",
     "Fabric", "FairScheduler", "FatTree", "FifoScheduler", "Flow", "JobDAG",
     "LeafSpine", "MSAScheduler", "Metaflow", "Perturbation",
-    "ReferenceSimulator", "Scheduler", "SimResult", "Simulator", "Topology",
+    "ReferenceSimulator", "RunResult", "Scheduler", "SimResult", "Simulator",
+    "Topology",
     "VarysScheduler", "available_policies", "big_switch", "fat_tree",
     "figure1_jobs", "figure2_job", "leaf_spine", "make_scheduler",
     "make_topology", "metaflow_priorities", "register", "simulate",

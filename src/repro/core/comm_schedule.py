@@ -35,7 +35,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig, ShapeConfig, param_count
-from repro.core.fabric import Fabric
 from repro.core.metaflow import JobDAG
 from repro.core.sched import make_scheduler
 from repro.core.simulator import simulate

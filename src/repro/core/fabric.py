@@ -418,7 +418,11 @@ class Residual:
                 raise ValueError("eg and ing must both be given, same length")
             n = len(eg)
             self.cap = list(eg) + list(ing)
-            self._route = lambda s, d: (s, n + d)
+
+            def route2(s: int, d: int) -> tuple[int, int]:
+                return (s, n + d)
+
+            self._route = route2
         else:
             if cap is None or route is None:
                 raise ValueError("general Residual needs cap and route")

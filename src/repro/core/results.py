@@ -1,0 +1,70 @@
+"""Structured per-run summaries: ``RunResult``.
+
+Every benchmark and experiment harness used to distill ``SimResult``
+into its own ad-hoc dict (perf rows, harness rows, sweep cells), each
+picking slightly different fields and rounding.  ``RunResult`` is the
+one JSON-stable summary of a single ``simulate`` run: the scalar
+aggregates every consumer reports, plus the per-job JCT/CCT maps the
+experiment aggregator needs for normalized-slowdown CDFs.
+
+All fields except ``wall_s`` are fully determined by (jobs, scheduler,
+fabric) — ``wall_s`` is the only machine-dependent value, so aggregate
+fingerprints and determinism tests must exclude exactly that field
+(see ``repro.experiments.aggregate``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.simulator import SimResult
+
+
+@dataclass(frozen=True)
+class RunResult:
+    """JSON-stable summary of one simulation run."""
+
+    n_jobs: int
+    avg_jct: float
+    avg_cct: float
+    makespan: float
+    events: int
+    sched_full: int
+    sched_refresh: int
+    jct: dict[str, float]     # per-job completion time since arrival
+    cct: dict[str, float]     # per-job last-flow completion since arrival
+    wall_s: float = 0.0       # host wall clock; the only nondeterministic field
+
+    @classmethod
+    def from_sim(cls, res: SimResult, wall_s: float = 0.0) -> "RunResult":
+        return cls(n_jobs=len(res.jct), avg_jct=res.avg_jct,
+                   avg_cct=res.avg_cct, makespan=res.makespan,
+                   events=res.events, sched_full=res.sched_full,
+                   sched_refresh=res.sched_refresh, jct=dict(res.jct),
+                   cct=dict(res.cct), wall_s=wall_s)
+
+    def to_json(self) -> dict:
+        return {"n_jobs": self.n_jobs, "avg_jct": self.avg_jct,
+                "avg_cct": self.avg_cct, "makespan": self.makespan,
+                "events": self.events, "sched_full": self.sched_full,
+                "sched_refresh": self.sched_refresh, "jct": dict(self.jct),
+                "cct": dict(self.cct), "wall_s": self.wall_s}
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "RunResult":
+        return cls(n_jobs=doc["n_jobs"], avg_jct=doc["avg_jct"],
+                   avg_cct=doc["avg_cct"], makespan=doc["makespan"],
+                   events=doc["events"], sched_full=doc["sched_full"],
+                   sched_refresh=doc["sched_refresh"], jct=dict(doc["jct"]),
+                   cct=dict(doc["cct"]), wall_s=doc["wall_s"])
+
+    def perf_row(self) -> dict:
+        """The scalar row shape of the perf trajectories
+        (``BENCH_sim_core.json``): wall rounded for stable diffs,
+        events/sec derived from the raw wall."""
+        return {"wall_s": round(self.wall_s, 3), "events": self.events,
+                "events_per_s": round(self.events / self.wall_s, 1)
+                if self.wall_s > 0 else 0.0,
+                "sched_full": self.sched_full,
+                "sched_refresh": self.sched_refresh,
+                "avg_jct": self.avg_jct}

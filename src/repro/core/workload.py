@@ -16,7 +16,6 @@ trace verbatim.
 
 from __future__ import annotations
 
-import math
 import random
 
 from repro.core.metaflow import JobDAG

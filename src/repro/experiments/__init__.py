@@ -1,0 +1,53 @@
+"""Monte-Carlo experiment harness (DESIGN.md §12).
+
+Declarative sweep specs over (scenarios x policies x topologies x
+seeds), compiled into shards, executed process-parallel with resumable
+per-shard JSON outputs, and aggregated into mean/95%-CI metrics,
+normalized-slowdown CDFs, and the paper's headline metaflow-vs-coflow
+ratio — the machinery behind ``benchmarks/sweep.py`` and the committed
+``BENCH_experiments.json``.
+"""
+
+from repro.experiments.aggregate import (
+    aggregate,
+    check,
+    fingerprint,
+    mean_ci95,
+    quantiles,
+    t_crit95,
+)
+from repro.experiments.runner import (
+    load_shard,
+    run_cell,
+    run_sweep,
+    scenario_rows,
+    shard_path,
+)
+from repro.experiments.spec import (
+    DEFAULT_TOPOLOGY,
+    Cell,
+    SweepSpec,
+    resolve_topology,
+    topology_arg,
+    validate_topology_spec,
+)
+
+__all__ = [
+    "Cell",
+    "DEFAULT_TOPOLOGY",
+    "SweepSpec",
+    "aggregate",
+    "check",
+    "fingerprint",
+    "load_shard",
+    "mean_ci95",
+    "quantiles",
+    "resolve_topology",
+    "run_cell",
+    "run_sweep",
+    "scenario_rows",
+    "shard_path",
+    "t_crit95",
+    "topology_arg",
+    "validate_topology_spec",
+]

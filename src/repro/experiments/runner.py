@@ -1,0 +1,199 @@
+"""Shard executor: cells -> process-parallel, resumable JSON outputs.
+
+``run_cell`` is the one place a measurement cell becomes a simulation —
+the seed-threaded helper every harness shares (the experiment sweep,
+``benchmarks/ml_workloads`` rows, smoke gates), so a cell rebuilt
+anywhere reproduces bit-identically.
+
+``run_sweep`` executes a ``SweepSpec`` shard-by-shard: each shard is an
+independent unit of ``spec.cells_per_shard`` simulations, run in a
+worker process and written atomically to ``<shard_dir>/shard_NNNN.json``
+(tmp + ``os.replace``, so a killed sweep never leaves a torn file).
+Re-running the same spec skips every shard whose file already exists
+and carries the matching ``spec_hash`` — resuming after a kill costs
+only the shards that never landed.
+"""
+
+from __future__ import annotations
+
+import json
+import multiprocessing
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from pathlib import Path
+
+from repro.appdag import build_scenario
+from repro.core import make_scheduler, simulate
+from repro.core.results import RunResult
+from repro.experiments.spec import Cell, SweepSpec, resolve_topology
+
+
+def run_cell(cell: Cell, quick: bool = False, debug_checks: bool = False) -> dict:
+    """Execute one measurement cell; returns its JSON record."""
+    t0 = time.perf_counter()
+    fabric, jobs = build_scenario(
+        cell.scenario,
+        seed=cell.seed,
+        quick=quick,
+        topology=cell.topology,
+    )
+    res = simulate(
+        jobs,
+        make_scheduler(cell.policy),
+        fabric=fabric,
+        debug_checks=debug_checks,
+    )
+    wall = time.perf_counter() - t0
+    if len(res.jct) != len(jobs):
+        msg = (
+            f"{cell.scenario}/{cell.policy}/seed{cell.seed}: "
+            f"{len(res.jct)} JCTs for {len(jobs)} jobs"
+        )
+        raise AssertionError(msg)
+    return {
+        "scenario": cell.scenario,
+        "policy": cell.policy,
+        "topology": cell.topology,
+        "seed": cell.seed,
+        "result": RunResult.from_sim(res, wall_s=wall).to_json(),
+    }
+
+
+def scenario_rows(
+    scenarios,
+    policies,
+    seed: int = 0,
+    quick: bool = False,
+    topology: str | None = None,
+    debug_checks: bool = False,
+) -> list[tuple]:
+    """Harness rows — the shared, seed-threaded row emission behind
+    ``benchmarks/ml_workloads`` (and anything else reporting
+    per-scenario policy sweeps): one ``(name, us_per_call, derived)``
+    row per scenario, ``derived = "<policy>=<jct>/<cct>;..."`` plus
+    ``fifo_over_msa`` / ``fair_over_msa`` ratios when those policies
+    ran.  Rows on any non-big-switch network (override or scenario
+    default) are named ``ml/<scenario>@<spec>`` so JSON trajectories
+    are tagged accurately per row."""
+    rows = []
+    for scen in scenarios:
+        concrete = resolve_topology(scen, topology)
+        t0 = time.perf_counter()
+        cells = []
+        for pname in policies:
+            cell = Cell(scen, pname, concrete, seed)
+            rec = run_cell(cell, quick=quick, debug_checks=debug_checks)
+            result = rec["result"]
+            cells.append((pname, result["avg_jct"], result["avg_cct"]))
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ";".join(f"{p}={j:.3f}/{c:.3f}" for p, j, c in cells)
+        jct = {p: j for p, j, _ in cells}
+        if "msa" in jct:
+            for p in ("fifo", "fair"):
+                if p in jct:
+                    derived += f";{p}_over_msa={jct[p] / jct['msa']:.3f}"
+        name = f"ml/{scen}" if concrete == "big_switch" else f"ml/{scen}@{concrete}"
+        rows.append((name, us, derived))
+    return rows
+
+
+def _run_shard(spec_json: str, shard_ix: int) -> dict:
+    """Worker entry point (module-level for pickling): one shard doc."""
+    spec = SweepSpec.from_json(json.loads(spec_json))
+    cells = spec.shards()[shard_ix]
+    return {
+        "shard": shard_ix,
+        "spec_hash": spec.spec_hash(),
+        "n_cells": len(cells),
+        "cells": [run_cell(c, quick=spec.quick) for c in cells],
+    }
+
+
+def shard_path(shard_dir: str | Path, shard_ix: int) -> Path:
+    return Path(shard_dir) / f"shard_{shard_ix:04d}.json"
+
+
+def _write_shard(shard_dir: Path, doc: dict) -> None:
+    """Atomic write: a shard file either exists complete or not at all."""
+    path = shard_path(shard_dir, doc["shard"])
+    tmp = path.with_suffix(".json.tmp")
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True, allow_nan=False)
+        fh.write("\n")
+    os.replace(tmp, path)
+
+
+def load_shard(shard_dir: str | Path, shard_ix: int, spec: SweepSpec) -> dict | None:
+    """A previously-written shard doc, or ``None`` when absent, torn, or
+    written by a different spec (stale shards are recomputed, never
+    silently mixed in)."""
+    path = shard_path(shard_dir, shard_ix)
+    if not path.exists():
+        return None
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (json.JSONDecodeError, OSError):
+        return None
+    if doc.get("spec_hash") != spec.spec_hash() or doc.get("shard") != shard_ix:
+        return None
+    if len(doc.get("cells", ())) != doc.get("n_cells"):
+        return None
+    return doc
+
+
+def run_sweep(
+    spec: SweepSpec,
+    shard_dir: str | Path,
+    workers: int | None = None,
+    resume: bool = True,
+    stop_after: int | None = None,
+    progress=None,
+) -> list[dict]:
+    """Execute (or finish) a sweep; returns completed shard docs sorted
+    by shard index.
+
+    ``workers=1`` runs in-process (no pool); ``stop_after=k`` stops
+    after ``k`` *newly computed* shards land, simulating a killed run —
+    the resume test re-invokes without it and must produce the
+    bit-identical aggregate.  The returned list is complete iff its
+    length equals ``len(spec.shards())``."""
+    shard_dir = Path(shard_dir)
+    shard_dir.mkdir(parents=True, exist_ok=True)
+    n_shards = len(spec.shards())
+    done: dict[int, dict] = {}
+    missing: list[int] = []
+    for ix in range(n_shards):
+        doc = load_shard(shard_dir, ix, spec) if resume else None
+        if doc is not None:
+            done[ix] = doc
+        else:
+            missing.append(ix)
+    if stop_after is not None:
+        keep = max(stop_after, 0)
+        missing = missing[:keep]
+    spec_json = json.dumps(spec.to_json())
+
+    if workers == 1:
+        for ix in missing:
+            doc = _run_shard(spec_json, ix)
+            _write_shard(shard_dir, doc)
+            done[ix] = doc
+            if progress:
+                progress(f"shard {ix} done ({len(done)}/{n_shards} on disk)")
+    elif missing:
+        workers = workers or os.cpu_count() or 1
+        # Spawn, not fork: the parent may have imported JAX (multithreaded)
+        # via other benchmarks/tests, and forking a threaded process can
+        # deadlock.  Workers only import the sim stack, so spawn stays cheap.
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
+            futs = {pool.submit(_run_shard, spec_json, ix): ix for ix in missing}
+            for fut in as_completed(futs):
+                doc = fut.result()
+                _write_shard(shard_dir, doc)
+                done[doc["shard"]] = doc
+                if progress:
+                    progress(f"shard {doc['shard']} done ({len(done)}/{n_shards})")
+    return [done[ix] for ix in sorted(done)]

@@ -1,0 +1,184 @@
+"""Declarative sweep specs: (scenarios x policies x topologies x seeds).
+
+A ``SweepSpec`` names *what* to measure; ``cells()`` compiles it into
+the flat list of independent measurement cells (one simulation each),
+and ``shards()`` chunks those cells into the resumable execution units
+``repro.experiments.runner`` runs process-parallel.
+
+Seed discipline (DESIGN.md §12): seed index ``k`` of a sweep uses
+workload seed ``seed0 + k`` — the *same* seed across every policy of
+one (scenario, topology, seed) group, so policy comparisons are paired
+on bit-identical workloads, and seed 0 of the default spec is exactly
+the workload the single-seed benchmark gates
+(``benchmarks/ml_workloads``) run, keeping the two trajectories
+cross-checkable.  Every cell is independently reproducible: rebuilding
+it outside the sweep via ``build_scenario(scenario, seed=seed,
+topology=topology)`` gives the bit-identical result (asserted in
+``tests/test_experiments.py``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from dataclasses import dataclass
+
+from repro.appdag.mixer import SCENARIO_TOPOLOGY, SCENARIOS
+from repro.core.fabric import make_topology
+from repro.core.sched import available_policies
+
+#: Sentinel topology meaning "the scenario's registered default".
+DEFAULT_TOPOLOGY = "default"
+
+
+def validate_topology_spec(spec: str, allow_default: bool = False) -> str:
+    """Fail fast on an unknown topology spec, naming the valid forms.
+
+    Parses via ``make_topology`` against a probe port count, so the
+    accepted grammar can never drift from the builder's."""
+    if allow_default and spec == DEFAULT_TOPOLOGY:
+        return spec
+    try:
+        make_topology(spec, 8)
+    except ValueError:
+        forms = "big_switch, leaf_spine_<R>to1 (e.g. leaf_spine_3to1), fat_tree"
+        if allow_default:
+            forms = f"{DEFAULT_TOPOLOGY}, {forms}"
+        msg = f"unknown topology spec {spec!r}; valid forms: {forms}"
+        raise ValueError(msg) from None
+    return spec
+
+
+def topology_arg(spec: str) -> str:
+    """``argparse`` type= adapter for ``--topology`` flags: unknown specs
+    abort argument parsing with the list of valid forms."""
+    try:
+        return validate_topology_spec(spec)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+
+
+def resolve_topology(scenario: str, topology: str | None) -> str:
+    """Concrete topology spec for one cell: an explicit spec wins,
+    ``None``/``"default"`` falls back to the scenario's registered
+    default (big-switch when unregistered)."""
+    if topology is None or topology == DEFAULT_TOPOLOGY:
+        return SCENARIO_TOPOLOGY.get(scenario, "big_switch")
+    return topology
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One measurement: a single (scenario, policy, topology, seed) run.
+
+    ``topology`` is always concrete (``default`` is resolved when the
+    spec is compiled), so shard files and aggregates are
+    self-describing."""
+
+    scenario: str
+    policy: str
+    topology: str
+    seed: int
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """The declarative experiment sweep the harness executes."""
+
+    scenarios: tuple[str, ...]
+    policies: tuple[str, ...]
+    n_seeds: int
+    topologies: tuple[str, ...] = (DEFAULT_TOPOLOGY,)
+    seed0: int = 0
+    quick: bool = False
+    cells_per_shard: int = 10
+    #: Baseline policy for normalized-slowdown CDFs and speedup ratios.
+    baseline: str = "varys"
+    #: (scenario, policy, baseline) of the headline ratio — the paper's
+    #: metaflow-vs-coflow claim is MSA vs varys/SEBF on the mixed cluster.
+    headline: tuple[str, str, str] = ("mixed", "msa", "varys")
+
+    def __post_init__(self):
+        known_scen = sorted(SCENARIOS)
+        for s in self.scenarios:
+            if s not in SCENARIOS:
+                raise ValueError(f"unknown scenario {s!r}; valid: {known_scen}")
+        known_pol = available_policies()
+        named = (*self.policies, self.baseline, self.headline[1], self.headline[2])
+        for p in named:
+            if p not in known_pol:
+                raise ValueError(f"unknown policy {p!r}; valid: {known_pol}")
+        for t in self.topologies:
+            validate_topology_spec(t, allow_default=True)
+        for scen in self.scenarios:
+            resolved = [resolve_topology(scen, t) for t in self.topologies]
+            if len(set(resolved)) != len(resolved):
+                msg = (
+                    f"topologies {list(self.topologies)} resolve to duplicate "
+                    f"concrete specs {resolved} for scenario {scen!r} — every "
+                    "cell would run twice and the aggregate would reject it"
+                )
+                raise ValueError(msg)
+        if self.n_seeds < 1:
+            raise ValueError(f"n_seeds must be >= 1, got {self.n_seeds}")
+        if self.cells_per_shard < 1:
+            msg = f"cells_per_shard must be >= 1, got {self.cells_per_shard}"
+            raise ValueError(msg)
+        if not self.scenarios or not self.policies or not self.topologies:
+            msg = "scenarios, policies and topologies must all be non-empty"
+            raise ValueError(msg)
+
+    # ---------------------------------------------------- serialization
+    def to_json(self) -> dict:
+        return {
+            "scenarios": list(self.scenarios),
+            "policies": list(self.policies),
+            "topologies": list(self.topologies),
+            "n_seeds": self.n_seeds,
+            "seed0": self.seed0,
+            "quick": self.quick,
+            "cells_per_shard": self.cells_per_shard,
+            "baseline": self.baseline,
+            "headline": list(self.headline),
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "SweepSpec":
+        return cls(
+            scenarios=tuple(doc["scenarios"]),
+            policies=tuple(doc["policies"]),
+            topologies=tuple(doc["topologies"]),
+            n_seeds=doc["n_seeds"],
+            seed0=doc["seed0"],
+            quick=doc["quick"],
+            cells_per_shard=doc["cells_per_shard"],
+            baseline=doc["baseline"],
+            headline=tuple(doc["headline"]),
+        )
+
+    def spec_hash(self) -> str:
+        """Stable digest of the spec — stamped into every shard file so
+        resume never mixes shards from two different sweeps."""
+        canon = json.dumps(self.to_json(), sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    # ----------------------------------------------------- compilation
+    def cells(self) -> list[Cell]:
+        """The flat cell list, in deterministic order: scenario, then
+        topology, then seed, then policy — all policies of one workload
+        are adjacent (paired-comparison locality within a shard)."""
+        out = []
+        for scen in self.scenarios:
+            for topo in self.topologies:
+                concrete = resolve_topology(scen, topo)
+                for k in range(self.n_seeds):
+                    seed = self.seed0 + k
+                    for pol in self.policies:
+                        out.append(Cell(scen, pol, concrete, seed))
+        return out
+
+    def shards(self) -> list[list[Cell]]:
+        cells = self.cells()
+        k = self.cells_per_shard
+        return [cells[i : i + k] for i in range(0, len(cells), k)]

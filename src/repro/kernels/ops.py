@@ -11,7 +11,6 @@ import functools
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rmsnorm as _rn

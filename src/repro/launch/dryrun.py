@@ -30,7 +30,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config, shapes_for
 from repro.configs.base import ModelConfig, ShapeConfig

@@ -104,8 +104,9 @@ def ssd_scan(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
     xdt = (x * dt[..., None].astype(x.dtype))                 # [B,S,H,P]
 
     # chunked views, chunk-major for the scan
-    c = lambda t: (t.reshape(Bsz, nc, Q, *t.shape[2:])
-                   .transpose(1, 0, *range(2, t.ndim + 1)))
+    def c(t):   # chunk view: [B,S,...] -> [nc,B,Q,...]
+        return (t.reshape(Bsz, nc, Q, *t.shape[2:])
+                .transpose(1, 0, *range(2, t.ndim + 1)))
     xc, dtAc = c(xdt), c(dtA)                                 # [nc,B,Q,...]
     Bc, Cc = c(Bm), c(Cm)
 

@@ -19,9 +19,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import ModelConfig
 from repro.models import encdec, transformer
 

@@ -7,7 +7,6 @@ FSDP sharding rules apply verbatim to ``m`` and ``v``.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 
@@ -43,8 +42,9 @@ class AdamW:
         return self.peak_lr * jnp.where(s < self.warmup_steps, warm, cos)
 
     def init(self, params) -> AdamWState:
-        zeros = lambda t: jax.tree.map(
-            lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        def zeros(t):
+            return jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), t)
         return AdamWState(step=jnp.zeros((), jnp.int32),
                           m=zeros(params), v=zeros(params))
 

@@ -61,7 +61,6 @@ def make_compressing_step(model, optimizer, microbatches: int = 1):
 
     State is (TrainState, EFState); metrics include the residual energy.
     """
-    from repro.train.state import TrainState
     from repro.train.step import make_train_step
 
     def step(carry, batch):

@@ -1,7 +1,6 @@
 """Chunked _sdpa (long-sequence path) equals the dense block path."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -38,7 +37,8 @@ def test_chunked_grads_match(monkeypatch):
     v = jax.random.normal(ks[2], (B, S, H, hd))
     mask = causal_mask(S, S, 0)
 
-    f = lambda q: attn._sdpa(q, k, v, mask, cfg).sum()
+    def f(q):
+        return attn._sdpa(q, k, v, mask, cfg).sum()
     g_dense = jax.grad(f)(q)
     monkeypatch.setattr(attn, "CHUNKED_SDPA_THRESHOLD", 8)
     g_chunk = jax.grad(f)(q)

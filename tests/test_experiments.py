@@ -1,0 +1,210 @@
+"""The Monte-Carlo experiment harness (DESIGN.md §12).
+
+Covers the contracts the sweep's credibility rests on: fail-fast spec
+validation, cell independence (a cell rebuilt outside the sweep is
+bit-identical), bit-equal aggregate determinism, kill-and-resume
+equivalence, stale-shard rejection, and the smoke-size headline gate
+(MSA >= varys on the mixed cluster).
+"""
+
+import json
+
+import pytest
+
+from repro.appdag import build_scenario
+from repro.core import RunResult, make_scheduler, simulate
+from repro.experiments import (
+    Cell,
+    SweepSpec,
+    aggregate,
+    check,
+    load_shard,
+    mean_ci95,
+    quantiles,
+    run_cell,
+    run_sweep,
+    shard_path,
+    t_crit95,
+    validate_topology_spec,
+)
+
+
+def tiny_spec(**overrides):
+    base = dict(
+        scenarios=("mixed",),
+        policies=("msa", "varys"),
+        n_seeds=2,
+        quick=True,
+        cells_per_shard=1,
+    )
+    base.update(overrides)
+    return SweepSpec(**base)
+
+
+def canonical(doc):
+    """Aggregate doc minus its only nondeterministic section."""
+    stripped = {k: v for k, v in doc.items() if k != "timing"}
+    return json.dumps(stripped, sort_keys=True)
+
+
+class TestSpec:
+    def test_unknown_scenario_fails_fast(self):
+        with pytest.raises(ValueError, match="unknown scenario.*dense_dp"):
+            tiny_spec(scenarios=("nope",))
+
+    def test_unknown_policy_fails_fast(self):
+        with pytest.raises(ValueError, match="unknown policy.*msa"):
+            tiny_spec(policies=("nope",))
+
+    def test_unknown_topology_fails_fast(self):
+        with pytest.raises(ValueError, match="valid forms.*leaf_spine"):
+            tiny_spec(topologies=("bogus",))
+        with pytest.raises(ValueError, match="valid forms"):
+            validate_topology_spec("leaf_spine_3to1x")
+
+    def test_duplicate_resolved_topologies_fail_fast(self):
+        # mixed's default IS big_switch: listing both would run every
+        # cell twice and only crash at aggregate time.
+        with pytest.raises(ValueError, match="duplicate concrete"):
+            tiny_spec(topologies=("default", "big_switch"))
+
+    def test_single_seed_aggregate_is_strict_json(self, tmp_path):
+        spec = tiny_spec(n_seeds=1)
+        doc = aggregate(spec, run_sweep(spec, tmp_path, workers=1))
+        # Must not contain Infinity/NaN tokens (RFC 8259).
+        text = json.dumps(doc, allow_nan=False)
+        assert json.loads(text)["headline"]["ratio"]["ci95"] is None
+
+    def test_roundtrip_and_hash(self):
+        spec = tiny_spec()
+        again = SweepSpec.from_json(json.loads(json.dumps(spec.to_json())))
+        assert again == spec
+        assert again.spec_hash() == spec.spec_hash()
+        assert tiny_spec(n_seeds=3).spec_hash() != spec.spec_hash()
+
+    def test_cells_are_paired_per_seed(self):
+        cells = tiny_spec().cells()
+        assert len(cells) == 4
+        # All policies of one workload seed are adjacent and share the seed.
+        assert [(c.policy, c.seed) for c in cells] == [
+            ("msa", 0),
+            ("varys", 0),
+            ("msa", 1),
+            ("varys", 1),
+        ]
+        # The default topology resolves to the scenario's registered one.
+        assert {c.topology for c in cells} == {"big_switch"}
+
+    def test_oversub_default_topology_resolves(self):
+        cells = tiny_spec(scenarios=("mixed_oversub_3to1",)).cells()
+        assert {c.topology for c in cells} == {"leaf_spine_3to1"}
+
+
+class TestRunCell:
+    def test_cell_matches_standalone_rebuild(self):
+        """Independent reproducibility: a sweep cell equals the same
+        (scenario, seed, topology) rebuilt and simulated directly."""
+        cell = Cell(scenario="mixed", policy="msa", topology="big_switch", seed=3)
+        rec = run_cell(cell, quick=True)
+        # mixed's registered default topology is exactly big_switch.
+        fabric, jobs = build_scenario("mixed", seed=3, quick=True)
+        res = simulate(jobs, make_scheduler("msa"), fabric=fabric)
+        assert rec["result"]["avg_jct"] == res.avg_jct
+        assert rec["result"]["jct"] == res.jct
+        assert rec["result"]["cct"] == res.cct
+
+    def test_runresult_roundtrip(self):
+        fabric, jobs = build_scenario("mixed", seed=0, quick=True)
+        res = simulate(jobs, make_scheduler("varys"), fabric=fabric)
+        rr = RunResult.from_sim(res, wall_s=1.5)
+        again = RunResult.from_json(json.loads(json.dumps(rr.to_json())))
+        assert again == rr
+        assert again.perf_row()["avg_jct"] == rr.avg_jct
+
+
+class TestSweep:
+    def test_determinism_bit_equal(self, tmp_path):
+        """Same spec + seeds => bit-equal aggregate JSON (minus timing)."""
+        spec = tiny_spec()
+        doc_a = aggregate(spec, run_sweep(spec, tmp_path / "a", workers=1))
+        doc_b = aggregate(spec, run_sweep(spec, tmp_path / "b", workers=2))
+        assert canonical(doc_a) == canonical(doc_b)
+        assert doc_a["fingerprint"] == doc_b["fingerprint"]
+
+    def test_shard_resume_bit_equal(self, tmp_path):
+        """Killing after k shards and re-running produces the identical
+        aggregate."""
+        spec = tiny_spec()
+        n_shards = len(spec.shards())
+        assert n_shards == 4
+        killed_dir = tmp_path / "killed"
+        partial = run_sweep(spec, killed_dir, workers=1, stop_after=2)
+        assert len(partial) == 2
+        on_disk = [i for i in range(n_shards) if shard_path(killed_dir, i).exists()]
+        assert on_disk == [0, 1]
+        resumed = aggregate(spec, run_sweep(spec, killed_dir, workers=1))
+        oneshot = aggregate(spec, run_sweep(spec, tmp_path / "oneshot", workers=1))
+        assert canonical(resumed) == canonical(oneshot)
+        assert resumed["fingerprint"] == oneshot["fingerprint"]
+
+    def test_stale_shards_recomputed(self, tmp_path):
+        spec = tiny_spec()
+        run_sweep(spec, tmp_path, workers=1)
+        assert load_shard(tmp_path, 0, spec) is not None
+        # A different spec must reject (and then recompute) every shard.
+        other = tiny_spec(n_seeds=3)
+        assert load_shard(tmp_path, 0, other) is None
+        # A torn file is recomputed, not trusted.
+        shard_path(tmp_path, 1).write_text('{"spec_hash": "torn"')
+        assert load_shard(tmp_path, 1, spec) is None
+        docs = run_sweep(spec, tmp_path, workers=1)
+        assert len(docs) == len(spec.shards())
+
+    def test_partial_sweep_refuses_to_aggregate(self, tmp_path):
+        spec = tiny_spec()
+        partial = run_sweep(spec, tmp_path, workers=1, stop_after=1)
+        with pytest.raises(ValueError, match="incomplete"):
+            aggregate(spec, partial)
+
+    def test_smoke_size_headline_msa_beats_varys(self, tmp_path):
+        """The CI smoke gate: MSA >= varys avg-JCT on the mixed cluster,
+        across every smoke seed."""
+        pols = ("msa", "varys", "fair")
+        spec = tiny_spec(policies=pols, n_seeds=3, cells_per_shard=3)
+        doc = aggregate(spec, run_sweep(spec, tmp_path, workers=1))
+        assert check(doc) == []
+        head = doc["headline"]
+        assert head["policy"] == "msa" and head["baseline"] == "varys"
+        assert head["ratio"]["mean"] >= 1.0
+        assert all(r >= 1.0 for r in head["per_seed_ratios"])
+        slow = doc["results"]["mixed|msa|big_switch"]["slowdown_vs_varys"]
+        assert slow["p50"] <= 1.0 + 1e-9
+
+    def test_check_flags_inverted_headline(self, tmp_path):
+        spec = tiny_spec()
+        doc = aggregate(spec, run_sweep(spec, tmp_path, workers=1))
+        doc["headline"]["ratio"]["mean"] = 0.5
+        errs = check(doc)
+        assert any("does not beat" in e for e in errs)
+
+
+class TestStats:
+    def test_t_crit95(self):
+        assert t_crit95(19) == 2.093
+        assert t_crit95(1000) == 1.96
+
+    def test_mean_ci95_known_values(self):
+        stats = mean_ci95([1.0, 2.0, 3.0])
+        assert stats["mean"] == 2.0
+        assert stats["std"] == 1.0
+        # t(2) = 4.303; half-width = 4.303 / sqrt(3)
+        assert abs(stats["ci95"] - 4.303 / 3**0.5) < 1e-12
+        # Undefined for one sample — and None, not inf, which would
+        # serialize as the non-RFC-8259 token Infinity.
+        assert mean_ci95([5.0])["ci95"] is None
+
+    def test_quantiles_interpolate(self):
+        q = quantiles([0.0, 1.0, 2.0, 3.0, 4.0])
+        assert q["p50"] == 2.0
+        assert q["p25"] == 1.0
+        assert q["p90"] == 3.6

@@ -26,7 +26,8 @@ def setup():
     shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
     pipe = make_pipeline(cfg, shape)
     step = jax.jit(make_train_step(model, opt))
-    init = lambda: init_state(model, opt, jax.random.PRNGKey(0))
+    def init():
+        return init_state(model, opt, jax.random.PRNGKey(0))
     return model, opt, step, init, pipe
 
 

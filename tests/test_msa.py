@@ -2,9 +2,8 @@
 
 import pytest
 
-from repro.core import (FairScheduler, MSAScheduler, VarysScheduler,
-                        figure1_jobs, figure2_job, metaflow_priorities,
-                        simulate)
+from repro.core import (MSAScheduler, VarysScheduler, figure1_jobs,
+                        figure2_job, metaflow_priorities, simulate)
 from repro.core.metaflow import JobDAG
 
 

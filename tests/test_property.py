@@ -21,9 +21,8 @@ pytest.importorskip(
            "still collect and run without it")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (Fabric, FairScheduler, JobDAG, MSAScheduler,
-                        VarysScheduler, metaflow_priorities, simulate)
-from repro.core.sched.msa import MetaflowPriority
+from repro.core import (FairScheduler, JobDAG, MSAScheduler, VarysScheduler,
+                        metaflow_priorities, simulate)
 
 
 @st.composite

@@ -9,8 +9,8 @@ every policy, with caching on and off.
 
 import pytest
 
-from repro.core import (Decision, Scheduler, available_policies,
-                        figure1_jobs, figure2_job, make_scheduler, simulate)
+from repro.core import (Scheduler, available_policies, figure1_jobs,
+                        figure2_job, make_scheduler, simulate)
 from repro.core.sched import register
 from repro.core.sched.registry import _REGISTRY
 from repro.core.workload import synth_fb_jobs
