@@ -53,7 +53,7 @@ def run(quick: bool = False, policies=None,
     rows = []
     for regime in REGIMES:
         for topo in TOPOLOGIES:
-            def jobs_for(seed=42):
+            def jobs_for(seed=42, regime=regime, topo=topo):
                 if regime == "trace":
                     return synth_fb_jobs(n_jobs, topo, seed=seed)
                 return _fanout_jobs(n_jobs, topo, seed=seed)

@@ -30,14 +30,16 @@ DEFAULT_POLICIES = ("msa", "varys", "fifo", "fair", "cpath")
 
 
 def run(quick: bool = False, policies=None, seed: int = 0,
-        topology: str | None = None) -> list[tuple]:
+        topology: str | None = None, analyze: bool = False) -> list[tuple]:
     if topology == "big_switch":
         topology = None   # explicit default: same rows/gates as no flag
     policies = tuple(policies) if policies else DEFAULT_POLICIES
     # Row emission is the shared, seed-threaded helper the experiment
     # harness also builds on — one definition of what a cell measures.
+    # ``analyze`` adds LP-free lower bounds + per-policy optimality gaps
+    # to each row's extra dict (``repro.analysis.bounds``).
     return scenario_rows(tuple(SCENARIOS), policies, seed=seed,
-                         quick=quick, topology=topology)
+                         quick=quick, topology=topology, analyze=analyze)
 
 
 def check(rows) -> list[str]:
@@ -46,12 +48,19 @@ def check(rows) -> list[str]:
     per-flow fairness everywhere and beats DAG-blind FIFO on the mixed
     cluster — the scenario the paper's abstraction exists for."""
     errs = []
-    for name, _, derived in rows:
+    for name, _, derived, *extras in rows:
         parts = dict(kv.split("=", 1) for kv in derived.split(";"))
         ratios = {k: float(v) for k, v in parts.items()
                   if k.endswith("_over_msa")}
+        extra = extras[0] if extras else {}
+        for pol, gap in extra.get("optimality_gap", {}).items():
+            # An achieved mean JCT below its LP-free lower bound means
+            # the bound (or the simulator) is broken, not the policy.
+            if gap < 1.0 - 1e-6:
+                errs.append(f"{name}: {pol} mean JCT beat its lower "
+                            f"bound (gap {gap:.4f} < 1)")
         for p, v in parts.items():
-            if p.endswith("_over_msa"):
+            if p.endswith("_over_msa") or p == "gap":
                 continue
             jct, cct = (float(x) for x in v.split("/"))
             if not (0 < jct < float("inf")) or not (0 <= cct <= jct + 1e-9):
@@ -89,6 +98,9 @@ def main() -> None:
                          "scenario's registered topology)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--analyze", action="store_true",
+                    help="compute LP-free lower bounds; print the mean "
+                         "JCT optimality gap per policy")
     args = ap.parse_args()
     policies = tuple(args.policy) if args.policy else DEFAULT_POLICIES
     scenarios = tuple(args.scenario) if args.scenario else tuple(SCENARIOS)
@@ -98,16 +110,23 @@ def main() -> None:
                                       topology=args.topology)
         print(f"\n== {scen}  ({fabric.topology.describe()}, {len(jobs)} "
               f"jobs, {sum(len(j.metaflows) for j in jobs)} metaflows) ==")
-        print(f"  {'policy':<8} {'avg JCT':>12} {'avg CCT':>12}")
+        gap_hdr = f" {'JCT gap':>9}" if args.analyze else ""
+        print(f"  {'policy':<8} {'avg JCT':>12} {'avg CCT':>12}{gap_hdr}")
         for pname in policies:
             rec = run_cell(Cell(scenario=scen, policy=pname,
                                 topology=resolve_topology(scen,
                                                           args.topology),
                                 seed=args.seed),
-                           quick=args.quick, debug_checks=True)
+                           quick=args.quick, debug_checks=True,
+                           analyze=args.analyze)
             r = rec["result"]
+            gap_col = ""
+            if args.analyze and r.get("jct_bound"):
+                from repro.analysis.bounds import mean_gap
+                gap = mean_gap(r["jct"], r["jct_bound"])
+                gap_col = f" {gap:>8.3f}x" if gap is not None else ""
             print(f"  {pname:<8} {r['avg_jct']:>12.3f} "
-                  f"{r['avg_cct']:>12.3f}")
+                  f"{r['avg_cct']:>12.3f}{gap_col}")
 
 
 if __name__ == "__main__":

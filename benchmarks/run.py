@@ -18,7 +18,13 @@ a machine-readable JSON document, so harness runs can land as points on
 the perf trajectory next to ``BENCH_sim_core.json``.
 
 Usage: python -m benchmarks.run [--quick] [--only NAME] [--policy NAME ...]
-       [--json PATH] [--seed N] [--topology SPEC]
+       [--json PATH] [--seed N] [--topology SPEC] [--analyze]
+
+``--analyze`` threads through every bench whose ``run`` takes it
+(currently ``ml_workloads``): each cell additionally computes LP-free
+per-job JCT/CCT lower bounds (``repro.analysis.bounds``), asserts the
+achieved times never beat them, and JSON rows gain ``jct_lower_bound``
+and per-policy ``optimality_gap`` fields.
 
 ``--seed`` threads through every bench whose ``run`` takes one
 (scenario construction is pure in the seed); unknown ``--policy`` /
@@ -67,6 +73,11 @@ def main() -> None:
                     help="workload seed for the benches that take one "
                          "(scenario construction is pure in the seed; "
                          "seed 0 is the pinned gate trajectory)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="for the benches that take it: compute LP-free "
+                         "JCT/CCT lower bounds per job, assert achieved "
+                         "times never beat them, and add "
+                         "jct_lower_bound / optimality_gap to JSON rows")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -84,6 +95,8 @@ def main() -> None:
         takes_topology = "topology" in params
         if args.topology and takes_topology:
             kwargs["topology"] = args.topology
+        if args.analyze and "analyze" in params:
+            kwargs["analyze"] = True
         rows = mod.run(**kwargs)
         for r in rows:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
@@ -92,9 +105,15 @@ def main() -> None:
             # row so e.g. ml/mixed_oversub_3to1 is never mislabeled.
             topo_tag = r[0].split("@", 1)[1] if "@" in r[0] \
                 else "big_switch"
-            json_rows.append({"bench": name, "name": r[0],
-                              "us_per_call": r[1], "derived": r[2],
-                              "topology": topo_tag})
+            row = {"bench": name, "name": r[0],
+                   "us_per_call": r[1], "derived": r[2],
+                   "topology": topo_tag}
+            # Analyze-mode rows carry an extra dict (jct_lower_bound,
+            # per-policy optimality_gap); merged flat so plain runs stay
+            # byte-identical to the pinned trajectory shape.
+            if len(r) > 3 and r[3]:
+                row.update(r[3])
+            json_rows.append(row)
         errs = mod.check(rows)
         for e in errs:
             print(f"CHECK-FAIL[{name}]: {e}", file=sys.stderr)

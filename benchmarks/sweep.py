@@ -18,11 +18,18 @@ Profiles:
              the committed full-sweep trajectory.
 
 Usage:
-  PYTHONPATH=src python benchmarks/sweep.py [--smoke]
+  PYTHONPATH=src python benchmarks/sweep.py [--smoke] [--analyze]
       [--scenario NAME ...] [--policy NAME ...] [--topology SPEC ...]
       [--seeds N] [--seed0 N] [--quick] [--cells-per-shard K]
       [--workers N] [--shard-dir DIR] [--no-resume]
       [--stop-after-shards K] [--out PATH]
+
+``--analyze`` makes every cell also carry its LP-free per-job JCT/CCT
+lower bounds (``repro.analysis.bounds``; achieved times are asserted to
+never beat them), and the aggregate reports the mean optimality gap
+(achieved avg over bound) per (scenario, policy).  Analyze is a runner
+knob, not part of the spec — ``spec_hash`` and plain-sweep fingerprints
+are unchanged.
 
 Unknown ``--scenario`` / ``--policy`` / ``--topology`` values fail fast
 with the list of valid choices.
@@ -168,6 +175,12 @@ def main() -> None:
         help="aggregate JSON (default BENCH_experiments.json; smoke writes "
         "BENCH_experiments_smoke.json)",
     )
+    ap.add_argument(
+        "--analyze",
+        action="store_true",
+        help="carry LP-free lower bounds per cell; aggregate reports the "
+        "mean JCT optimality gap per (scenario, policy)",
+    )
     args = ap.parse_args()
 
     spec = build_spec(args)
@@ -190,6 +203,7 @@ def main() -> None:
         resume=not args.no_resume,
         stop_after=args.stop_after_shards,
         progress=lambda m: print(f"  {m}", flush=True),
+        analyze=args.analyze,
     )
     wall = time.perf_counter() - t0
     if len(docs) < len(shards):
@@ -213,6 +227,16 @@ def main() -> None:
             f"(95% CI, {r['n']} seeds)"
         )
         print(msg)
+
+    if args.analyze:
+        gap_rows = [(k, e["optimality_gap"]["mean"])
+                    for k, e in doc["results"].items()
+                    if "optimality_gap" in e]
+        for k, g in sorted(gap_rows):
+            print(f"  optimality gap {k}: {g:.3f}x over LP-free bound")
+        if not gap_rows:
+            print("  no optimality gaps in aggregate: resumed shards "
+                  "lack bounds (re-run with --no-resume)", file=sys.stderr)
 
     with open(out) as fh:  # validate what actually landed on disk
         errs = check(json.load(fh))

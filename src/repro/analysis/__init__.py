@@ -1,0 +1,34 @@
+"""Static analysis over the metaflow pipeline (DESIGN.md §13).
+
+Three layers, all LP- and simulation-free:
+
+* :mod:`repro.analysis.lint` — named checks over ``JobDAG`` batches and
+  compiled scenarios, returning structured ``Finding``s;
+* :mod:`repro.analysis.bounds` — per-metaflow CCT and per-job JCT lower
+  bounds (link bound x DAG critical path), the optimality-gap
+  denominator;
+* :mod:`repro.analysis.sanitize` — the ``Decision`` invariant engine
+  behind ``Simulator(debug_checks=True)`` and post-hoc trace audits.
+"""
+
+from repro.analysis.bounds import (assert_bounds_hold, job_lower_bounds,
+                                   link_seconds, mean_gap,
+                                   mf_cct_lower_bound,
+                                   scenario_lower_bounds)
+from repro.analysis.lint import (Finding, LintError, available_checks,
+                                 check, expected_wire_bytes, lint_jobs,
+                                 lint_lowered, lint_scenario, strict)
+from repro.analysis.sanitize import (DecisionRecord, InvariantViolation,
+                                     RecordingScheduler,
+                                     available_invariants, audit_decision,
+                                     audit_record, audit_trace, invariant)
+
+__all__ = [
+    "DecisionRecord", "Finding", "InvariantViolation", "LintError",
+    "RecordingScheduler", "assert_bounds_hold", "audit_decision",
+    "audit_record", "audit_trace", "available_checks",
+    "available_invariants", "check", "expected_wire_bytes",
+    "invariant", "job_lower_bounds", "link_seconds", "lint_jobs",
+    "lint_lowered", "lint_scenario", "mean_gap", "mf_cct_lower_bound",
+    "scenario_lower_bounds", "strict",
+]

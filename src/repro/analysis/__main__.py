@@ -1,0 +1,5 @@
+"""``python -m repro.analysis``: the scenario-lint CLI (CI analyze gate)."""
+
+from repro.analysis.lint import main
+
+raise SystemExit(main())

@@ -1,0 +1,138 @@
+"""LP-free lower bounds on CCT/JCT — the optimality-gap denominator.
+
+"Experimental Analysis of Algorithms for Coflow Scheduling" evaluates
+every heuristic against a computable lower bound instead of only against
+other heuristics; this module gives the repo the same axis without an LP
+solver, from two relaxations that hold for *any* feasible schedule on an
+unperturbed fabric:
+
+* **link bound** — a set of flows routed via ``Topology.path`` pushes
+  ``sum(size)`` bytes through every link its members cross; a link of
+  capacity ``c`` moves at most ``c`` bytes per unit time even with the
+  rest of the fabric idle, so the set needs at least
+  ``max_link(bytes_on_link / cap)`` time units.  Applied per metaflow
+  (its CCT bound) and to a whole job's flow set (all flows must be done
+  by the job's CCT and JCT).
+* **critical-path bound** — dependencies serialize: node ``n`` cannot
+  finish before ``weight(n) + max over deps d of finish(d)``, with
+  ``weight(task) = load / machine_speed`` (compute is uncontended, unit
+  speed is its best case) and ``weight(metaflow) =`` its link bound.
+  One topological DP per job; the max over metaflow nodes lower-bounds
+  the CCT, the max over all nodes the JCT.
+
+Both relaxations ignore cross-job contention and scheduling altogether,
+so ``bound <= achieved`` for every policy — the achieved/bound ratio is
+the per-job *optimality gap* (>= 1, smaller is better) that ``run_cell
+(analyze=True)`` attaches to every :class:`~repro.core.results.
+RunResult` and ``repro.experiments.aggregate`` summarizes per policy.
+
+The bounds read template state only (``Flow.size``, ``ComputeTask.
+load``, the DAG edges — never ``remaining``/``finish_time``), so they
+may be computed before or after the simulation mutates the jobs.
+Perturbed (degraded) fabrics only *lose* capacity, so bounds computed on
+the nominal topology remain valid there too.
+"""
+
+from __future__ import annotations
+
+from repro.core.fabric import Topology
+from repro.core.metaflow import JobDAG, Metaflow
+
+
+def link_seconds(flows, topology: Topology) -> float:
+    """Link bound for one flow set: ``max_link(bytes / cap)`` with every
+    flow routed via ``Topology.path`` (0.0 for an empty set)."""
+    link_bytes: dict[int, float] = {}
+    for f in flows:
+        if f.size <= 0 or f.src == f.dst:
+            continue
+        for link in topology.path(f.src, f.dst):
+            link_bytes[link] = link_bytes.get(link, 0.0) + f.size
+    return max((b / float(topology.cap[link])
+                for link, b in link_bytes.items()
+                if topology.cap[link] > 0), default=0.0)
+
+
+def mf_cct_lower_bound(mf: Metaflow, topology: Topology) -> float:
+    """Per-metaflow CCT lower bound: its flows' link bound."""
+    return link_seconds(mf.flows, topology)
+
+
+def job_lower_bounds(job: JobDAG, topology: Topology,
+                     machine_speed: float = 1.0) -> tuple[float, float]:
+    """``(jct_lb, cct_lb)`` for one job, both measured from its arrival
+    (matching ``SimResult.jct`` / ``.cct`` semantics)."""
+    names = list(job.tasks) + list(job.metaflows)
+    weight: dict[str, float] = {}
+    for n, t in job.tasks.items():
+        weight[n] = t.load / machine_speed
+    mf_bound: dict[str, float] = {}
+    for n, mf in job.metaflows.items():
+        mf_bound[n] = mf_cct_lower_bound(mf, topology)
+        weight[n] = mf_bound[n]
+
+    # Longest path to each node's completion (Kahn order — independent of
+    # JobDAG.validate so a linted-but-unvalidated DAG can't loop us).
+    indeg = {n: len(job.node(n).deps) for n in names}
+    out: dict[str, list[str]] = {n: [] for n in names}
+    for n in names:
+        for d in job.node(n).deps:
+            out[d].append(n)
+    frontier = [n for n in names if indeg[n] == 0]
+    dist: dict[str, float] = {}
+    order: list[str] = []
+    while frontier:
+        n = frontier.pop()
+        order.append(n)
+        dist[n] = weight[n] + max((dist[d] for d in job.node(n).deps),
+                                  default=0.0)
+        for m in out[n]:
+            indeg[m] -= 1
+            if indeg[m] == 0:
+                frontier.append(m)
+    if len(order) != len(names):
+        raise ValueError(f"job {job.name!r} has a dependency cycle; "
+                         "lint it before bounding")
+
+    # All of a job's flows (across metaflows) share the fabric too.
+    whole = link_seconds((f for mf in job.metaflows.values()
+                          for f in mf.flows), topology)
+    cct_lb = max(max((dist[n] for n in job.metaflows), default=0.0), whole)
+    jct_lb = max(max(dist.values(), default=0.0), whole)
+    return jct_lb, cct_lb
+
+
+def scenario_lower_bounds(jobs: list[JobDAG], topology: Topology,
+                          machine_speed: float = 1.0
+                          ) -> tuple[dict[str, float], dict[str, float]]:
+    """Per-job ``(jct_bound, cct_bound)`` maps for a whole batch."""
+    jct_b: dict[str, float] = {}
+    cct_b: dict[str, float] = {}
+    for j in jobs:
+        jct_b[j.name], cct_b[j.name] = job_lower_bounds(
+            j, topology, machine_speed=machine_speed)
+    return jct_b, cct_b
+
+
+def mean_gap(achieved: dict[str, float],
+             bounds: dict[str, float]) -> float | None:
+    """Mean per-job achieved/bound ratio over jobs with a positive bound
+    (``None`` when no job has one — e.g. compute-only batches)."""
+    ratios = [achieved[j] / b for j, b in bounds.items()
+              if b > 0 and j in achieved]
+    if not ratios:
+        return None
+    return sum(ratios) / len(ratios)
+
+
+def assert_bounds_hold(achieved: dict[str, float],
+                       bounds: dict[str, float], what: str,
+                       rel_tol: float = 1e-6) -> None:
+    """Sanity gate: a bound exceeding its achieved value is a bug in the
+    bound (or the simulator), never a property of the workload."""
+    for j, b in bounds.items():
+        got = achieved.get(j)
+        if got is not None and got < b * (1.0 - rel_tol) - 1e-9:
+            raise AssertionError(
+                f"{what} lower bound violated for job {j!r}: "
+                f"bound {b:.17g} > achieved {got:.17g}")

@@ -9,10 +9,13 @@ occupies ``[offset, offset + span)``).
 
 ``SCENARIOS`` registers the canonical scenarios the ML-workload
 benchmark sweeps (dense-DP training, MoE EP training, pipelined serving,
-the mixed cluster where all three share the fabric with MapReduce, and
-the same mix on a 3:1-oversubscribed leaf-spine);
+the mixed cluster where all three share the fabric with MapReduce,
+the same mix on a 3:1-oversubscribed leaf-spine, and a pure FB-shaped
+MapReduce shuffle control);
 ``build_scenario(name, seed, quick)`` returns ``(fabric, jobs)`` with
-fresh job and fabric objects every call (simulation mutates both).  Each
+fresh job and fabric objects every call (simulation mutates both), and
+strict-lints the compiled batch through ``repro.analysis.lint`` unless
+called with ``lint=False``.  Each
 scenario carries a default network topology in ``SCENARIO_TOPOLOGY``
 (big-switch unless stated); the ``topology`` argument / ``--topology``
 benchmark flag overrides it with any ``repro.core.make_topology`` spec.
@@ -89,7 +92,8 @@ def poisson_mix(templates: list[JobTemplate], n_jobs: int, n_ports: int,
         tpl = rng.choices(templates, weights=weights)[0]
         offset = rng.randrange(0, n_ports - tpl.span + 1)
         jobs.append(tpl.dag.instantiate(name=f"{tpl.name}#{i}",
-                                        arrival=t_now, port_offset=offset))
+                                        arrival=t_now, port_offset=offset,
+                                        n_ports=n_ports))
         t_now += rng.expovariate(1.0 / mean_interarrival)
     return jobs
 
@@ -218,12 +222,29 @@ def scenario_mixed_oversub(seed: int = 0, quick: bool = False):
     return scenario_mixed(seed=seed, quick=quick)
 
 
+def scenario_fb_shuffle(seed: int = 0, quick: bool = False):
+    """Pure MapReduce shuffle mix on a 16-port fabric: FB-trace-shaped
+    coflows only — the coflow literature's home turf, where DAGs are
+    shallow (map -> shuffle -> reduce) and metaflow gains come almost
+    entirely from the direct class.  The control scenario the training
+    mixes are compared against."""
+    n_ports = 16
+    rng = random.Random(seed + FB_TEMPLATE_STREAM)
+    templates = _fb_templates(rng, 3, max_span=12, target_size=100.0)
+    mean_load = sum(t.dag.total_load() for t in templates) / len(templates)
+    n_jobs = 4 if quick else 8
+    jobs = poisson_mix(templates, n_jobs, n_ports,
+                       mean_interarrival=0.5 * mean_load, seed=seed)
+    return n_ports, jobs
+
+
 SCENARIOS = {
     "dense_dp": scenario_dense_dp,
     "moe_ep": scenario_moe_ep,
     "pipe_serve": scenario_pipe_serve,
     "mixed": scenario_mixed,
     "mixed_oversub_3to1": scenario_mixed_oversub,
+    "fb_shuffle": scenario_fb_shuffle,
 }
 
 # Default network topology per scenario (big_switch when absent); any
@@ -234,14 +255,24 @@ SCENARIO_TOPOLOGY = {
 
 
 def build_scenario(name: str, seed: int = 0, quick: bool = False,
-                   topology: str | None = None
+                   topology: str | None = None, lint: bool = True
                    ) -> tuple[Fabric, list[JobDAG]]:
     """(fresh fabric, fresh jobs) for one registered scenario.
 
-    ``topology`` overrides the scenario's registered default spec."""
+    ``topology`` overrides the scenario's registered default spec.
+
+    Every compile is linted in strict mode (``repro.analysis.lint``):
+    error-severity findings — cycles, self-flows, out-of-range ports —
+    raise ``LintError`` here instead of failing deep in the simulator.
+    ``lint=False`` skips it (the linter itself compiles scenarios this
+    way, and perf harnesses may opt out of the O(flows) pass)."""
     if name not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; known: "
                        f"{sorted(SCENARIOS)}")
     n_ports, jobs = SCENARIOS[name](seed=seed, quick=quick)
     spec = topology or SCENARIO_TOPOLOGY.get(name, "big_switch")
-    return Fabric(topology=make_topology(spec, n_ports)), jobs
+    fabric = Fabric(topology=make_topology(spec, n_ports))
+    if lint:
+        from repro.analysis.lint import lint_jobs, strict
+        strict(lint_jobs(jobs, fabric.topology))
+    return fabric, jobs

@@ -15,7 +15,8 @@ from repro.core.sched import (CriticalPathScheduler, Decision, FairScheduler,
                               FifoScheduler, MSAScheduler, Scheduler,
                               VarysScheduler, available_policies,
                               make_scheduler, metaflow_priorities, register)
-from repro.core.simref import ReferenceSimulator, simulate_reference
+from repro.core.simref import (ReferenceSimulator, UnsupportedTopologyError,
+                               simulate_reference)
 from repro.core.simulator import Perturbation, SimResult, Simulator, simulate
 
 __all__ = [
@@ -23,7 +24,7 @@ __all__ = [
     "Fabric", "FairScheduler", "FatTree", "FifoScheduler", "Flow", "JobDAG",
     "LeafSpine", "MSAScheduler", "Metaflow", "Perturbation",
     "ReferenceSimulator", "RunResult", "Scheduler", "SimResult", "Simulator",
-    "Topology",
+    "Topology", "UnsupportedTopologyError",
     "VarysScheduler", "available_policies", "big_switch", "fat_tree",
     "figure1_jobs", "figure2_job", "leaf_spine", "make_scheduler",
     "make_topology", "metaflow_priorities", "register", "simulate",

@@ -279,7 +279,8 @@ class JobDAG:
                     port_offset: int = 0,
                     port_map: dict[int, int] | None = None,
                     comm_scale: float = 1.0,
-                    compute_scale: float = 1.0) -> "JobDAG":
+                    compute_scale: float = 1.0,
+                    n_ports: int | None = None) -> "JobDAG":
         """Fresh runnable copy of this DAG treated as a template.
 
         Simulation mutates jobs (remaining sizes, finish times), so
@@ -288,14 +289,26 @@ class JobDAG:
         (exact) or ``port_offset`` (shift) relocates the job on the
         fabric; ``comm_scale``/``compute_scale`` rescale flow sizes and
         compute loads (matching workload regimes across job families).
+
+        Relocation is validated eagerly: a mapped endpoint below 0 —
+        or at/above ``n_ports`` when the target fabric's size is given —
+        raises here, at the placement site, instead of surfacing deep in
+        the simulator's table build (consistent with ``Fabric.degrade``'s
+        index validation).
         """
         if comm_scale < 0 or compute_scale < 0:
             raise ValueError("scale factors must be >= 0")
 
         def port(p: int) -> int:
-            if port_map is not None:
-                return port_map[p]
-            return p + port_offset
+            q = port_map[p] if port_map is not None else p + port_offset
+            if q < 0 or (n_ports is not None and q >= n_ports):
+                top = f"0..{n_ports - 1}" if n_ports is not None else ">= 0"
+                raise ValueError(
+                    f"job {self.name!r}: port {p} relocates to {q}, "
+                    f"outside the fabric ({top}); "
+                    f"port_offset={port_offset}, port_map="
+                    f"{'set' if port_map is not None else 'None'}")
+            return q
 
         out = JobDAG(name=name if name is not None else self.name,
                      arrival=self.arrival if arrival is None else arrival)

@@ -34,21 +34,35 @@ class RunResult:
     jct: dict[str, float]     # per-job completion time since arrival
     cct: dict[str, float]     # per-job last-flow completion since arrival
     wall_s: float = 0.0       # host wall clock; the only nondeterministic field
+    # LP-free per-job lower bounds (repro.analysis.bounds), carried only
+    # by analyze-mode runs: serialization omits them when None so default
+    # artifacts (and their fingerprints) are byte-identical to before.
+    jct_bound: dict[str, float] | None = None
+    cct_bound: dict[str, float] | None = None
 
     @classmethod
-    def from_sim(cls, res: SimResult, wall_s: float = 0.0) -> "RunResult":
+    def from_sim(cls, res: SimResult, wall_s: float = 0.0,
+                 jct_bound: dict[str, float] | None = None,
+                 cct_bound: dict[str, float] | None = None) -> "RunResult":
         return cls(n_jobs=len(res.jct), avg_jct=res.avg_jct,
                    avg_cct=res.avg_cct, makespan=res.makespan,
                    events=res.events, sched_full=res.sched_full,
                    sched_refresh=res.sched_refresh, jct=dict(res.jct),
-                   cct=dict(res.cct), wall_s=wall_s)
+                   cct=dict(res.cct), wall_s=wall_s,
+                   jct_bound=dict(jct_bound) if jct_bound else None,
+                   cct_bound=dict(cct_bound) if cct_bound else None)
 
     def to_json(self) -> dict:
-        return {"n_jobs": self.n_jobs, "avg_jct": self.avg_jct,
-                "avg_cct": self.avg_cct, "makespan": self.makespan,
-                "events": self.events, "sched_full": self.sched_full,
-                "sched_refresh": self.sched_refresh, "jct": dict(self.jct),
-                "cct": dict(self.cct), "wall_s": self.wall_s}
+        doc = {"n_jobs": self.n_jobs, "avg_jct": self.avg_jct,
+               "avg_cct": self.avg_cct, "makespan": self.makespan,
+               "events": self.events, "sched_full": self.sched_full,
+               "sched_refresh": self.sched_refresh, "jct": dict(self.jct),
+               "cct": dict(self.cct), "wall_s": self.wall_s}
+        if self.jct_bound is not None:
+            doc["jct_bound"] = dict(self.jct_bound)
+        if self.cct_bound is not None:
+            doc["cct_bound"] = dict(self.cct_bound)
+        return doc
 
     @classmethod
     def from_json(cls, doc: dict) -> "RunResult":
@@ -56,7 +70,9 @@ class RunResult:
                    avg_cct=doc["avg_cct"], makespan=doc["makespan"],
                    events=doc["events"], sched_full=doc["sched_full"],
                    sched_refresh=doc["sched_refresh"], jct=dict(doc["jct"]),
-                   cct=dict(doc["cct"]), wall_s=doc["wall_s"])
+                   cct=dict(doc["cct"]), wall_s=doc["wall_s"],
+                   jct_bound=doc.get("jct_bound"),
+                   cct_bound=doc.get("cct_bound"))
 
     def perf_row(self) -> dict:
         """The scalar row shape of the perf trajectories

@@ -30,6 +30,15 @@ from repro.core.simulator import (ActiveMF, Perturbation, SchedView,
                                   SimResult)
 
 
+class UnsupportedTopologyError(ValueError):
+    """An engine was handed a fabric topology it cannot simulate.
+
+    A typed refusal: callers degrading to another engine (or asserting
+    the refusal in tests) catch this specific type instead of pattern-
+    matching a bare ``ValueError`` message — the two engines must never
+    disagree *silently*."""
+
+
 class ReferenceSimulator:
     """The pre-compaction core.  Same constructor contract as
     ``Simulator`` (minus the debug flag — its capacity check always runs,
@@ -42,7 +51,7 @@ class ReferenceSimulator:
                  max_events: int = 5_000_000,
                  cache_decisions: bool = True) -> None:
         if fabric.topology.kind != "big_switch":
-            raise ValueError(
+            raise UnsupportedTopologyError(
                 "ReferenceSimulator predates the topology abstraction and "
                 "only supports the big-switch fabric; run routed topologies "
                 "on repro.core.Simulator")

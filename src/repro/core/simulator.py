@@ -45,8 +45,10 @@ rather than F flow events).  The per-flow Python backfill loop is replaced
 by an exact dedupe: only the first live flow per (src, dst) port pair can
 receive a backfill grant (the grant zeroes the smaller of the two
 residuals), so the sequential sweep runs over distinct port pairs, not
-flows.  The port-capacity invariant check is debug-only
-(``debug_checks=True``).  ``repro.core.simref`` keeps the pre-compaction
+flows.  Decision invariants (capacity conservation, rates only on live
+flows, order coverage, work conservation) are debug-only
+(``debug_checks=True``), delegated per event to the pluggable engine in
+``repro.analysis.sanitize``.  ``repro.core.simref`` keeps the pre-compaction
 core verbatim as the equivalence and perf baseline; results are
 bit-identical (asserted exactly in tests/test_sim_core_equiv.py).
 """
@@ -600,6 +602,12 @@ class Simulator:
         self.max_events = max_events
         self.cache_decisions = cache_decisions
         self.debug_checks = debug_checks
+        if debug_checks:
+            # Deferred import: the invariant engine lives a layer above
+            # the core (repro.analysis builds on repro.core), so the
+            # dependency only materializes on the debug path.
+            from repro.analysis.sanitize import audit_decision
+            self._audit_decision = audit_decision
         self._build_tables()
         scheduler.attach(fabric, self.jobs)
 
@@ -1012,7 +1020,7 @@ class Simulator:
                     sched_refresh += 1
                 rates = decision.rates
                 if self.debug_checks:
-                    self._check_capacity(rates, view)
+                    self._audit_decision(view, decision)
                 if unserved:
                     record_service(decision, rates)
             else:
@@ -1127,22 +1135,6 @@ class Simulator:
                          timeline=timeline, sched_full=sched_full,
                          sched_refresh=sched_refresh,
                          mf_service_order=service_order)
-
-    @staticmethod
-    def _check_capacity(rates: np.ndarray, view: SchedView) -> None:
-        """Invariant: the policy never oversubscribes a link.  Debug-only
-        (``debug_checks=True``): an O(path entries) bincount per event,
-        which the compacted hot path exists to avoid."""
-        cnt = np.diff(view.lp)
-        load = np.bincount(view.li, weights=np.repeat(rates, cnt),
-                           minlength=view.n_links)
-        over = load > view.link_cap + 1e-6
-        if over.any():
-            bad = np.nonzero(over)[0].tolist()
-            names = ([view.link_names[b] for b in bad]
-                     if view.link_names else bad)
-            raise AssertionError(f"link(s) {names} oversubscribed")
-
 
 def simulate(jobs: list[JobDAG], scheduler, n_ports: int | None = None,
              fabric: Fabric | None = None, topology: Topology | None = None,

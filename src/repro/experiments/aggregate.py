@@ -26,6 +26,7 @@ import hashlib
 import json
 import math
 
+from repro.analysis.bounds import mean_gap
 from repro.experiments.spec import SweepSpec, resolve_topology
 
 # Two-tailed Student-t critical values at 95%, df = 1..30.
@@ -131,6 +132,15 @@ def aggregate(spec: SweepSpec, shard_docs: list[dict]) -> dict:
                     "avg_jct": mean_ci95([r["avg_jct"] for r in runs]),
                     "avg_cct": mean_ci95([r["avg_cct"] for r in runs]),
                 }
+                # Analyze-mode sweeps carry LP-free per-job lower bounds;
+                # surface the per-seed mean optimality gap (achieved JCT /
+                # bound).  Added only when every seed has bounds, so plain
+                # sweeps produce a byte-identical payload + fingerprint.
+                if all(r.get("jct_bound") for r in runs):
+                    gaps = [mean_gap(r["jct"], r["jct_bound"]) for r in runs]
+                    gaps = [g for g in gaps if g is not None]
+                    if gaps:
+                        entry["optimality_gap"] = mean_ci95(gaps)
                 if base is not None and pol != spec.baseline:
                     ratios = [b["avg_jct"] / r["avg_jct"] for b, r in zip(base, runs)]
                     entry[f"speedup_over_{spec.baseline}"] = mean_ci95(ratios)
@@ -194,6 +204,12 @@ def check(doc: dict) -> list[str]:
         c = entry["avg_cct"]["mean"]
         if not (0 <= c < float("inf")):
             errs.append(f"{key}: degenerate avg_cct mean {c}")
+        gap = entry.get("optimality_gap")
+        if gap is not None and not (gap["mean"] >= 1.0 - 1e-6):
+            errs.append(
+                f"{key}: mean optimality gap {gap['mean']:.4f} < 1 "
+                "(achieved JCT beat its lower bound)"
+            )
     head = doc.get("headline")
     if head is not None:
         r = head["ratio"]["mean"]

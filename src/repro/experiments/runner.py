@@ -29,8 +29,18 @@ from repro.core.results import RunResult
 from repro.experiments.spec import Cell, SweepSpec, resolve_topology
 
 
-def run_cell(cell: Cell, quick: bool = False, debug_checks: bool = False) -> dict:
-    """Execute one measurement cell; returns its JSON record."""
+def run_cell(
+    cell: Cell,
+    quick: bool = False,
+    debug_checks: bool = False,
+    analyze: bool = False,
+) -> dict:
+    """Execute one measurement cell; returns its JSON record.
+
+    ``analyze=True`` additionally computes the LP-free per-job lower
+    bounds (``repro.analysis.bounds``), asserts the achieved JCT/CCT
+    never beat them, and carries them in the result record — opt-in so
+    default artifacts stay byte-identical."""
     t0 = time.perf_counter()
     fabric, jobs = build_scenario(
         cell.scenario,
@@ -38,6 +48,11 @@ def run_cell(cell: Cell, quick: bool = False, debug_checks: bool = False) -> dic
         quick=quick,
         topology=cell.topology,
     )
+    jct_b = cct_b = None
+    if analyze:
+        from repro.analysis.bounds import scenario_lower_bounds
+
+        jct_b, cct_b = scenario_lower_bounds(jobs, fabric.topology)
     res = simulate(
         jobs,
         make_scheduler(cell.policy),
@@ -51,12 +66,20 @@ def run_cell(cell: Cell, quick: bool = False, debug_checks: bool = False) -> dic
             f"{len(res.jct)} JCTs for {len(jobs)} jobs"
         )
         raise AssertionError(msg)
+    if analyze:
+        from repro.analysis.bounds import assert_bounds_hold
+
+        what = f"{cell.scenario}/{cell.policy}/seed{cell.seed} jct"
+        assert_bounds_hold(res.jct, jct_b, what)
+        assert_bounds_hold(res.cct, cct_b, what[:-3] + "cct")
     return {
         "scenario": cell.scenario,
         "policy": cell.policy,
         "topology": cell.topology,
         "seed": cell.seed,
-        "result": RunResult.from_sim(res, wall_s=wall).to_json(),
+        "result": RunResult.from_sim(
+            res, wall_s=wall, jct_bound=jct_b, cct_bound=cct_b
+        ).to_json(),
     }
 
 
@@ -67,25 +90,41 @@ def scenario_rows(
     quick: bool = False,
     topology: str | None = None,
     debug_checks: bool = False,
+    analyze: bool = False,
 ) -> list[tuple]:
     """Harness rows — the shared, seed-threaded row emission behind
     ``benchmarks/ml_workloads`` (and anything else reporting
-    per-scenario policy sweeps): one ``(name, us_per_call, derived)``
-    row per scenario, ``derived = "<policy>=<jct>/<cct>;..."`` plus
-    ``fifo_over_msa`` / ``fair_over_msa`` ratios when those policies
-    ran.  Rows on any non-big-switch network (override or scenario
-    default) are named ``ml/<scenario>@<spec>`` so JSON trajectories
-    are tagged accurately per row."""
+    per-scenario policy sweeps): one ``(name, us_per_call, derived,
+    extra)`` row per scenario, ``derived = "<policy>=<jct>/<cct>;..."``
+    plus ``fifo_over_msa`` / ``fair_over_msa`` ratios when those
+    policies ran.  ``extra`` is a dict of analyze-mode fields
+    (``jct_lower_bound``, per-policy ``optimality_gap``); it is empty
+    unless ``analyze=True``, so derived strings and row fingerprints
+    are unchanged by default.  Rows on any non-big-switch network
+    (override or scenario default) are named ``ml/<scenario>@<spec>``
+    so JSON trajectories are tagged accurately per row."""
     rows = []
     for scen in scenarios:
         concrete = resolve_topology(scen, topology)
         t0 = time.perf_counter()
         cells = []
+        gaps: dict[str, float] = {}
+        bound_mean = None
         for pname in policies:
             cell = Cell(scen, pname, concrete, seed)
-            rec = run_cell(cell, quick=quick, debug_checks=debug_checks)
+            rec = run_cell(
+                cell, quick=quick, debug_checks=debug_checks, analyze=analyze
+            )
             result = rec["result"]
             cells.append((pname, result["avg_jct"], result["avg_cct"]))
+            if analyze and result.get("jct_bound"):
+                from repro.analysis.bounds import mean_gap
+
+                gap = mean_gap(result["jct"], result["jct_bound"])
+                if gap is not None:
+                    gaps[pname] = round(gap, 4)
+                bounds = result["jct_bound"]
+                bound_mean = round(sum(bounds.values()) / len(bounds), 4)
         us = (time.perf_counter() - t0) * 1e6
         derived = ";".join(f"{p}={j:.3f}/{c:.3f}" for p, j, c in cells)
         jct = {p: j for p, j, _ in cells}
@@ -93,12 +132,18 @@ def scenario_rows(
             for p in ("fifo", "fair"):
                 if p in jct:
                     derived += f";{p}_over_msa={jct[p] / jct['msa']:.3f}"
+        extra: dict = {}
+        if gaps:
+            extra = {"jct_lower_bound": bound_mean, "optimality_gap": gaps}
+            derived += ";gap=" + ",".join(
+                f"{p}:{g:.3f}" for p, g in gaps.items()
+            )
         name = f"ml/{scen}" if concrete == "big_switch" else f"ml/{scen}@{concrete}"
-        rows.append((name, us, derived))
+        rows.append((name, us, derived, extra))
     return rows
 
 
-def _run_shard(spec_json: str, shard_ix: int) -> dict:
+def _run_shard(spec_json: str, shard_ix: int, analyze: bool = False) -> dict:
     """Worker entry point (module-level for pickling): one shard doc."""
     spec = SweepSpec.from_json(json.loads(spec_json))
     cells = spec.shards()[shard_ix]
@@ -106,7 +151,7 @@ def _run_shard(spec_json: str, shard_ix: int) -> dict:
         "shard": shard_ix,
         "spec_hash": spec.spec_hash(),
         "n_cells": len(cells),
-        "cells": [run_cell(c, quick=spec.quick) for c in cells],
+        "cells": [run_cell(c, quick=spec.quick, analyze=analyze) for c in cells],
     }
 
 
@@ -150,6 +195,7 @@ def run_sweep(
     resume: bool = True,
     stop_after: int | None = None,
     progress=None,
+    analyze: bool = False,
 ) -> list[dict]:
     """Execute (or finish) a sweep; returns completed shard docs sorted
     by shard index.
@@ -158,7 +204,13 @@ def run_sweep(
     after ``k`` *newly computed* shards land, simulating a killed run —
     the resume test re-invokes without it and must produce the
     bit-identical aggregate.  The returned list is complete iff its
-    length equals ``len(spec.shards())``."""
+    length equals ``len(spec.shards())``.
+
+    ``analyze=True`` makes every cell carry its LP-free lower bounds
+    (see ``run_cell``).  Analyze is a runner knob, not part of the
+    ``SweepSpec`` — ``spec_hash`` (and thus every existing fingerprint)
+    is unaffected; resuming a plain sweep with ``analyze=True`` only
+    adds bounds to the shards that still need computing."""
     shard_dir = Path(shard_dir)
     shard_dir.mkdir(parents=True, exist_ok=True)
     n_shards = len(spec.shards())
@@ -177,7 +229,7 @@ def run_sweep(
 
     if workers == 1:
         for ix in missing:
-            doc = _run_shard(spec_json, ix)
+            doc = _run_shard(spec_json, ix, analyze)
             _write_shard(shard_dir, doc)
             done[ix] = doc
             if progress:
@@ -189,7 +241,10 @@ def run_sweep(
         # deadlock.  Workers only import the sim stack, so spawn stays cheap.
         ctx = multiprocessing.get_context("spawn")
         with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
-            futs = {pool.submit(_run_shard, spec_json, ix): ix for ix in missing}
+            futs = {
+                pool.submit(_run_shard, spec_json, ix, analyze): ix
+                for ix in missing
+            }
             for fut in as_completed(futs):
                 doc = fut.result()
                 _write_shard(shard_dir, doc)

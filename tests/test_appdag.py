@@ -206,6 +206,24 @@ class TestMixer:
         # the template is untouched
         assert job.metaflows["m"].flows[0].size == 4.0
 
+    def test_instantiate_rejects_out_of_fabric_ports(self):
+        """Eager port validation: a template relocated past the fabric
+        edge fails at instantiation with the offending port named, not
+        deep inside the simulator (consistent with ``Fabric.degrade``)."""
+        job = JobDAG(name="t")
+        job.add_metaflow("m", flows=[(0, 3, 4.0)])
+        job.add_task("c", load=1.0, machine=3, deps=["m"])
+        with pytest.raises(ValueError, match="outside the fabric"):
+            job.instantiate(name="t#0", arrival=0.0, port_offset=2,
+                            n_ports=4)
+        with pytest.raises(ValueError, match="outside the fabric"):
+            job.instantiate(name="t#1", arrival=0.0,
+                            port_map={0: 1, 3: 7}, n_ports=4)
+        # In-range relocation with the same guard enabled still works.
+        inst = job.instantiate(name="t#2", arrival=0.0, port_offset=1,
+                               n_ports=5)
+        assert inst.tasks["c"].machine == 4
+
     def test_poisson_mix_places_and_names(self):
         tpl = JobDAG(name="t")
         tpl.add_metaflow("m", flows=[(0, 1, 1.0)])
@@ -227,7 +245,8 @@ class TestMixer:
         assert bal.metaflows["m"].flows[0].size == pytest.approx(10.0)
 
     @pytest.mark.parametrize("scen", ["dense_dp", "moe_ep", "pipe_serve",
-                                      "mixed", "mixed_oversub_3to1"])
+                                      "mixed", "mixed_oversub_3to1",
+                                      "fb_shuffle"])
     def test_scenarios_simulate_end_to_end(self, scen):
         fabric, jobs = build_scenario(scen, seed=0, quick=True)
         if scen == "mixed_oversub_3to1":     # the new default topology axis

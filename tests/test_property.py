@@ -108,7 +108,7 @@ def test_fast_priorities_match_reference(job, rnd):
     ref_names = [p.name for p in ref]
     assert fast_names == ref_names, (
         f"fast {fast_names} != reference {ref_names}")
-    for (key, rec), p in zip(fast, ref):
+    for (key, _rec), p in zip(fast, ref):
         assert (key[0] == 0) == p.direct
 
 

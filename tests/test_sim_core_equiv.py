@@ -17,8 +17,8 @@ import numpy as np
 import pytest
 
 from repro.core import (Fabric, JobDAG, Perturbation, ReferenceSimulator,
-                        Scheduler, Simulator, make_scheduler, simulate,
-                        simulate_reference)
+                        Scheduler, Simulator, UnsupportedTopologyError,
+                        make_scheduler, simulate, simulate_reference)
 from repro.core.sched.base import Decision
 from repro.core.workload import build_job, synth_fb_coflow
 
@@ -79,6 +79,21 @@ class TestOldVsNew:
         assert res_new.jct == res_old.jct
         assert res_new.cct == res_old.cct
         assert res_new.mf_service_order == res_old.mf_service_order
+
+    def test_reference_refusal_is_typed(self):
+        """The frozen core's capability gap is a distinct exception type
+        (still a ValueError for old callers), catchable without
+        string-matching the message."""
+        from repro.core import leaf_spine
+        assert issubclass(UnsupportedTopologyError, ValueError)
+        n_ports, jobs = _random_batch(n_jobs=2, seed=9)
+        fab = Fabric(topology=leaf_spine(4, 8, oversubscription=3.0))
+        try:
+            ReferenceSimulator(fab, jobs, make_scheduler("msa")).run()
+        except UnsupportedTopologyError:
+            pass
+        else:
+            raise AssertionError("routed topology was not refused")
 
 
 def _residue_job() -> JobDAG:

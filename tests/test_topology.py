@@ -14,11 +14,12 @@ The ISSUE-4 acceptance tests:
   vacuous), and ECMP routing keeps runs deterministic.
 """
 
-import numpy as np
 import pytest
 
-from repro.core import (Fabric, JobDAG, Simulator, big_switch, leaf_spine,
-                        make_scheduler, simulate, simulate_reference)
+from repro.analysis import RecordingScheduler, audit_trace
+from repro.core import (Fabric, JobDAG, Simulator, UnsupportedTopologyError,
+                        big_switch, leaf_spine, make_scheduler, simulate,
+                        simulate_reference)
 from test_sim_core_equiv import ALL_POLICIES, _random_batch
 
 
@@ -57,49 +58,32 @@ class TestBigSwitchTopologyEquivalence:
     def test_reference_refuses_routed_topologies(self):
         n_ports, jobs = _random_batch(n_jobs=3, seed=1)
         fab = Fabric(topology=leaf_spine(4, 8, oversubscription=3.0))
-        with pytest.raises(ValueError, match="big-switch"):
+        # Typed refusal: callers can catch the capability gap without
+        # string-matching the message.
+        with pytest.raises(UnsupportedTopologyError, match="big-switch"):
             simulate_reference(jobs, make_scheduler("msa"), fabric=fab)
-
-
-def _conserving(pname: str, records: list):
-    """Wrap a policy so every Decision's per-link load is recorded and
-    checked against capacity — an independent witness to the simulator's
-    own ``debug_checks``."""
-
-    class Conserving(make_scheduler(pname).__class__):
-        def _audit(self, view, decision):
-            rates = decision.rates
-            cnt = np.diff(view.lp)
-            load = np.bincount(view.li, weights=np.repeat(rates, cnt),
-                               minlength=view.n_links)
-            records.append((float((load - view.link_cap).max()),
-                            float(load.max())))
-            assert (load <= view.link_cap + 1e-6).all(), \
-                "per-link conservation violated"
-            return decision
-
-        def schedule(self, view):
-            return self._audit(view, super().schedule(view))
-
-        def refresh(self, view, prev):
-            return self._audit(view, super().refresh(view, prev))
-
-    return Conserving()
 
 
 class TestLeafSpineConservation:
     @pytest.mark.parametrize("pname", ALL_POLICIES)
     def test_no_link_ever_oversubscribed(self, pname):
+        """Every Decision's per-link load is recorded and re-audited
+        post-hoc — an independent witness to the simulator's own
+        ``debug_checks`` (which also run here)."""
         n_ports, jobs = _random_batch(n_jobs=12, seed=13)
         fab = Fabric(topology=leaf_spine(4, 8, oversubscription=3.0))
-        records: list = []
-        res = Simulator(fab, jobs, _conserving(pname, records),
-                        debug_checks=True).run()
+        sched = RecordingScheduler(make_scheduler(pname))
+        res = Simulator(fab, jobs, sched, debug_checks=True).run()
         assert len(res.jct) == 12
-        assert records                      # the audit actually ran
-        assert max(m for m, _ in records) <= 1e-6
+        assert sched.records                # the recorder actually ran
+        violations = audit_trace(sched.records)
+        assert violations == []
+        loads = [rec.link_load() for rec in sched.records]
+        overcap = max(float((ld - rec.link_cap).max())
+                      for ld, rec in zip(loads, sched.records))
+        assert overcap <= 1e-6
         # The fabric was genuinely used (loads reached the link scale).
-        assert max(load for _, load in records) > 0.1
+        assert max(float(ld.max()) for ld in loads) > 0.1
 
 
 class TestOversubscriptionBites:
