@@ -30,16 +30,20 @@ DEFAULT_POLICIES = ("msa", "varys", "fifo", "fair", "cpath")
 
 
 def run(quick: bool = False, policies=None, seed: int = 0,
-        topology: str | None = None, analyze: bool = False) -> list[tuple]:
+        topology: str | None = None, analyze: bool = False,
+        trace_dir: str | None = None) -> list[tuple]:
     if topology == "big_switch":
         topology = None   # explicit default: same rows/gates as no flag
     policies = tuple(policies) if policies else DEFAULT_POLICIES
     # Row emission is the shared, seed-threaded helper the experiment
     # harness also builds on — one definition of what a cell measures.
     # ``analyze`` adds LP-free lower bounds + per-policy optimality gaps
-    # to each row's extra dict (``repro.analysis.bounds``).
+    # to each row's extra dict (``repro.analysis.bounds``);
+    # ``trace_dir`` writes one repro.obs Chrome trace per cell into it
+    # (rows and derived strings are unchanged — tracing is observational).
     return scenario_rows(tuple(SCENARIOS), policies, seed=seed,
-                         quick=quick, topology=topology, analyze=analyze)
+                         quick=quick, topology=topology, analyze=analyze,
+                         trace_dir=trace_dir)
 
 
 def check(rows) -> list[str]:

@@ -14,12 +14,23 @@ Writes ``BENCH_sim_core.json``:
 
   rows[]                 one dict per (core, policy, jobs) measurement
   speedup_500_jobs_msa   reference wall / compacted wall at 500 jobs
+  tracer_overhead        tracer-on vs tracer-off walls at the largest
+                         MSA size <= 500 (repro.obs overhead contract:
+                         results must stay bit-identical; the tracked
+                         walls quantify the tracing cost)
   notes[]                anything skipped or capped (no silent caps)
+
+All wall times come from ``time.perf_counter()``.
 
 Usage:
   PYTHONPATH=src python benchmarks/perf_sim_core.py [--out PATH]
       [--sizes N ...] [--policies NAME ...] [--seed N] [--smoke]
-      [--topology SPEC]
+      [--topology SPEC] [--overhead-only]
+
+``--overhead-only`` runs just the tracer-overhead pair (one traced +
+one untraced run at the largest requested MSA size) and merges the
+``tracer_overhead`` section into an existing ``--out`` document, so the
+tracked number is refreshable without re-running the full sweep.
 
 ``--smoke`` is the CI profile: tiny sizes, baseline only at the smallest,
 per-link ``debug_checks`` on, then validates the emitted JSON and exits
@@ -98,6 +109,36 @@ def _run_one(core: str, pname: str, n_jobs: int, seed: int,
             "topology": topology, **rr.perf_row()}
 
 
+def measure_tracer_overhead(pname: str, n_jobs: int, seed: int,
+                            topology: str = "big_switch",
+                            off_row: dict | None = None) -> dict:
+    """Tracer-on vs tracer-off wall time at one (policy, size) point.
+
+    The untraced measurement can be reused from an already-measured row
+    (``off_row``); the traced run attaches a ``repro.obs.MemoryTracer``
+    and must reproduce the untraced ``avg_jct`` bit-identically (the
+    overhead contract — validated by ``check``)."""
+    from repro.obs import MemoryTracer
+
+    if off_row is None:
+        off_row = _run_one("compacted", pname, n_jobs, seed,
+                           topology=topology)
+    n_ports, jobs = scale_mixed(n_jobs, seed=seed)
+    tracer = MemoryTracer()
+    fabric = Fabric(topology=make_topology(topology, n_ports))
+    t0 = time.perf_counter()
+    res = simulate(jobs, make_scheduler(pname), fabric=fabric, tracer=tracer)
+    wall_on = time.perf_counter() - t0
+    wall_off = float(off_row["wall_s"])
+    return {"policy": pname, "jobs": n_jobs, "topology": topology,
+            "wall_off_s": round(wall_off, 3),
+            "wall_on_s": round(wall_on, 3),
+            "overhead_pct": round((wall_on / wall_off - 1.0) * 100, 1)
+            if wall_off > 0 else 0.0,
+            "n_trace_events": len(tracer.events),
+            "avg_jct_bit_equal": res.avg_jct == off_row["avg_jct"]}
+
+
 def _assert_equivalent(pname: str, n_jobs: int, seed: int) -> None:
     n_ports, jobs = scale_mixed(n_jobs, seed=seed)
     new = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
@@ -173,6 +214,23 @@ def run_bench(sizes, policies, baseline, seed: int,
     new = wall.get(("compacted", "msa", 500))
     if ref and new:
         out["speedup_500_jobs_msa"] = round(ref / new, 2)
+    # Tracer overhead at the largest already-measured MSA point (the
+    # repro.obs contract: bit-identical results, tracked extra wall).
+    # Lives outside rows[] so the regression gate's row-key universe is
+    # unchanged.
+    opname = "msa" if "msa" in policies else policies[0]
+    ocap = COMPACT_CAP.get(opname)
+    osizes = [s for s in sizes if s <= 500 and (ocap is None or s <= ocap)]
+    okey = ("compacted", opname, max(osizes)) if osizes else None
+    if okey in wall:
+        off_row = next(r for r in rows
+                       if (r["core"], r["policy"], r["jobs"]) == okey)
+        ov = measure_tracer_overhead(opname, okey[2], seed,
+                                     topology=topology, off_row=off_row)
+        out["tracer_overhead"] = ov
+        print(f"  tracer    {opname:<6} {okey[2]:>5} jobs  "
+              f"{ov['wall_on_s']:>8.2f}s traced vs {ov['wall_off_s']:.2f}s "
+              f"({ov['overhead_pct']:+.1f}%)", flush=True)
     return out
 
 
@@ -194,6 +252,11 @@ def check(doc: dict, smoke: bool) -> list[str]:
             and doc["speedup_500_jobs_msa"] < 5.0:
         errs.append(f"500-job mixed MSA speedup "
                     f"{doc['speedup_500_jobs_msa']}x < 5x (ISSUE-3 gate)")
+    ov = doc.get("tracer_overhead")
+    if ov is not None and not ov.get("avg_jct_bit_equal"):
+        errs.append(f"traced run diverged from untraced "
+                    f"({ov.get('policy')}@{ov.get('jobs')}): tracing must "
+                    "be observational")
     return errs
 
 
@@ -216,6 +279,10 @@ def main() -> None:
                     help="network topology spec (big_switch, "
                          "leaf_spine_<R>to1, fat_tree); non-big-switch "
                          "sweeps skip the pre-topology reference core")
+    ap.add_argument("--overhead-only", action="store_true",
+                    help="measure just the tracer overhead pair and merge "
+                         "the tracer_overhead section into --out (keeps "
+                         "the rest of an existing trajectory document)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -232,6 +299,35 @@ def main() -> None:
     if args.out is None:
         args.out = ("BENCH_sim_core.json" if args.topology == "big_switch"
                     else f"BENCH_sim_core_{args.topology}.json")
+
+    if args.overhead_only:
+        pname = "msa" if "msa" in policies else policies[0]
+        cap = COMPACT_CAP.get(pname)
+        cands = [s for s in sizes if s <= 500 and (cap is None or s <= cap)]
+        if not cands:
+            print("CHECK-FAIL[sim_core]: no tractable size for "
+                  "--overhead-only", file=sys.stderr)
+            sys.exit(1)
+        n_jobs = max(cands)
+        ov = measure_tracer_overhead(pname, n_jobs, args.seed,
+                                     topology=args.topology)
+        try:
+            with open(args.out) as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            doc = {"bench": "sim_core", "rows": [], "notes": []}
+        doc["tracer_overhead"] = ov
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"tracer overhead {pname}@{n_jobs}: {ov['wall_on_s']}s traced "
+              f"vs {ov['wall_off_s']}s untraced ({ov['overhead_pct']:+.1f}%)")
+        print(f"merged tracer_overhead into {args.out}")
+        if not ov["avg_jct_bit_equal"]:
+            print("CHECK-FAIL[sim_core]: traced run diverged from untraced",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
 
     doc = run_bench(sizes, policies, baseline, args.seed, equivalence_at,
                     topology=args.topology, debug_checks=args.smoke)

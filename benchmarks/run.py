@@ -18,7 +18,7 @@ a machine-readable JSON document, so harness runs can land as points on
 the perf trajectory next to ``BENCH_sim_core.json``.
 
 Usage: python -m benchmarks.run [--quick] [--only NAME] [--policy NAME ...]
-       [--json PATH] [--seed N] [--topology SPEC] [--analyze]
+       [--json PATH] [--seed N] [--topology SPEC] [--analyze] [--trace DIR]
 
 ``--analyze`` threads through every bench whose ``run`` takes it
 (currently ``ml_workloads``): each cell additionally computes LP-free
@@ -78,6 +78,10 @@ def main() -> None:
                          "JCT/CCT lower bounds per job, assert achieved "
                          "times never beat them, and add "
                          "jct_lower_bound / optimality_gap to JSON rows")
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="for the benches that take it: trace every cell "
+                         "with repro.obs and write one Chrome trace JSON "
+                         "per cell into DIR (results stay bit-identical)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -97,6 +101,8 @@ def main() -> None:
             kwargs["topology"] = args.topology
         if args.analyze and "analyze" in params:
             kwargs["analyze"] = True
+        if args.trace and "trace_dir" in params:
+            kwargs["trace_dir"] = args.trace
         rows = mod.run(**kwargs)
         for r in rows:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")

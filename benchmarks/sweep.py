@@ -22,7 +22,7 @@ Usage:
       [--scenario NAME ...] [--policy NAME ...] [--topology SPEC ...]
       [--seeds N] [--seed0 N] [--quick] [--cells-per-shard K]
       [--workers N] [--shard-dir DIR] [--no-resume]
-      [--stop-after-shards K] [--out PATH]
+      [--stop-after-shards K] [--out PATH] [--trace DIR] [--verbose]
 
 ``--analyze`` makes every cell also carry its LP-free per-job JCT/CCT
 lower bounds (``repro.analysis.bounds``; achieved times are asserted to
@@ -181,6 +181,19 @@ def main() -> None:
         help="carry LP-free lower bounds per cell; aggregate reports the "
         "mean JCT optimality gap per (scenario, policy)",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="DIR",
+        help="trace every cell with repro.obs: write one Chrome trace "
+        "JSON per cell into DIR and carry trace_counters on results "
+        "(results stay bit-identical)",
+    )
+    ap.add_argument(
+        "--verbose",
+        action="store_true",
+        help="per-cell worker heartbeats (shard id, cells done, elapsed)",
+    )
     args = ap.parse_args()
 
     spec = build_spec(args)
@@ -204,6 +217,8 @@ def main() -> None:
         stop_after=args.stop_after_shards,
         progress=lambda m: print(f"  {m}", flush=True),
         analyze=args.analyze,
+        trace_dir=args.trace,
+        verbose=args.verbose,
     )
     wall = time.perf_counter() - t0
     if len(docs) < len(shards):

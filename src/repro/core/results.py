@@ -39,18 +39,29 @@ class RunResult:
     # artifacts (and their fingerprints) are byte-identical to before.
     jct_bound: dict[str, float] | None = None
     cct_bound: dict[str, float] | None = None
+    # Applied fabric degrade/restore events.  Previously invisible in any
+    # output; serialization omits the default 0 (perturbation-free runs —
+    # all pinned artifacts — stay byte-identical).
+    n_perturbations: int = 0
+    # repro.obs scheduler-counter summary, carried only by traced runs
+    # (includes nondeterministic policy wall times); omitted when None.
+    trace_counters: dict | None = None
 
     @classmethod
     def from_sim(cls, res: SimResult, wall_s: float = 0.0,
                  jct_bound: dict[str, float] | None = None,
-                 cct_bound: dict[str, float] | None = None) -> "RunResult":
+                 cct_bound: dict[str, float] | None = None,
+                 trace_counters: dict | None = None) -> "RunResult":
         return cls(n_jobs=len(res.jct), avg_jct=res.avg_jct,
                    avg_cct=res.avg_cct, makespan=res.makespan,
                    events=res.events, sched_full=res.sched_full,
                    sched_refresh=res.sched_refresh, jct=dict(res.jct),
                    cct=dict(res.cct), wall_s=wall_s,
                    jct_bound=dict(jct_bound) if jct_bound else None,
-                   cct_bound=dict(cct_bound) if cct_bound else None)
+                   cct_bound=dict(cct_bound) if cct_bound else None,
+                   n_perturbations=res.n_perturbations,
+                   trace_counters=dict(trace_counters)
+                   if trace_counters else None)
 
     def to_json(self) -> dict:
         doc = {"n_jobs": self.n_jobs, "avg_jct": self.avg_jct,
@@ -62,6 +73,10 @@ class RunResult:
             doc["jct_bound"] = dict(self.jct_bound)
         if self.cct_bound is not None:
             doc["cct_bound"] = dict(self.cct_bound)
+        if self.n_perturbations:
+            doc["n_perturbations"] = self.n_perturbations
+        if self.trace_counters is not None:
+            doc["trace_counters"] = dict(self.trace_counters)
         return doc
 
     @classmethod
@@ -72,7 +87,9 @@ class RunResult:
                    sched_refresh=doc["sched_refresh"], jct=dict(doc["jct"]),
                    cct=dict(doc["cct"]), wall_s=doc["wall_s"],
                    jct_bound=doc.get("jct_bound"),
-                   cct_bound=doc.get("cct_bound"))
+                   cct_bound=doc.get("cct_bound"),
+                   n_perturbations=doc.get("n_perturbations", 0),
+                   trace_counters=doc.get("trace_counters"))
 
     def perf_row(self) -> dict:
         """The scalar row shape of the perf trajectories

@@ -56,6 +56,7 @@ bit-identical (asserted exactly in tests/test_sim_core_equiv.py).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from time import perf_counter
 
 import numpy as np
 
@@ -97,6 +98,7 @@ class SimResult:
     # Metaflows in first-service order (first positive rate), priority-
     # ordered within one decision — the policy's realized transfer order.
     mf_service_order: list[tuple[str, str]] = field(default_factory=list)
+    n_perturbations: int = 0              # applied degrade/restore events
 
     @property
     def avg_jct(self) -> float:
@@ -587,7 +589,8 @@ class Simulator:
                  record_timeline: bool = False,
                  max_events: int = 5_000_000,
                  cache_decisions: bool = True,
-                 debug_checks: bool = False) -> None:
+                 debug_checks: bool = False,
+                 tracer=None) -> None:
         for j in jobs:
             j.validate()
         names = [j.name for j in jobs]
@@ -602,6 +605,11 @@ class Simulator:
         self.max_events = max_events
         self.cache_decisions = cache_decisions
         self.debug_checks = debug_checks
+        # Telemetry sink (repro.obs.Tracer, a layer above the core) or
+        # None.  Mirrors the debug_checks pattern: every hook site in
+        # run() sits behind one `if tr is not None` check, so the
+        # default path pays no tracing cost.
+        self.tracer = tracer
         if debug_checks:
             # Deferred import: the invariant engine lives a layer above
             # the core (repro.analysis builds on repro.core), so the
@@ -718,6 +726,9 @@ class Simulator:
         last_flow: dict[str, float] = {}
         events = 0
         sched = self.scheduler
+        tr = self.tracer
+        if tr is not None:
+            tr.run_begin(self.fabric)
 
         live_jobs: list[JobDAG] = []
         done_jobs: list[JobDAG] = []           # retire at end of the event
@@ -734,6 +745,7 @@ class Simulator:
         # changed — exactly the events that also dirty every decision
         # cache, so a cached Decision never outlives its compact layout.
         dirty = True
+        dirty_why = "init"      # structural reason behind the next full schedule
         compact_stale = False
         compact_added: list[ActiveMF] = []  # activations since last rebuild
         compact_removed: list[tuple[int, int]] = []  # dropped (start, size)
@@ -749,6 +761,15 @@ class Simulator:
             bitrem_cache.pop(jname, None)
             attr_cache.pop(jname, None)
             job_scratch.pop(jname, None)
+
+        def mark_dirty(why: str) -> None:
+            """Invalidate the decision cache, remembering the *first*
+            structural cause since the last full schedule (traced as the
+            full-schedule reason)."""
+            nonlocal dirty, dirty_why
+            if not dirty:
+                dirty_why = why
+            dirty = True
         # Compacted active-flow state: one slot per flow of an active
         # metaflow, grouped contiguously per metaflow in activation order.
         c_src = np.empty(0, dtype=np.int32)
@@ -887,10 +908,9 @@ class Simulator:
 
         def node_finished(job: JobDAG, name: str) -> None:
             """Cascade a node completion through the frontier."""
-            nonlocal dirty
             job.mark_dirty()
             if sched.on_node_finish(job, name):
-                dirty = True
+                mark_dirty("node_finish")
             unfinished_nodes[job.name] -= 1
             if unfinished_nodes[job.name] == 0:
                 done_jobs.append(job)
@@ -900,11 +920,13 @@ class Simulator:
                     activate(job, child)
 
         def activate(job: JobDAG, name: str) -> None:
-            nonlocal dirty, compact_stale
+            nonlocal compact_stale
             node = job.node(name)
             if isinstance(node, ComputeTask):
                 node.start_time = t
                 running.append((job, node))
+                if tr is not None:
+                    tr.compute_start(t, job.name, name)
                 log(f"start {job.name}/{name}")
             else:
                 rec = self._mfs[self._mf_ord[(job.name, name)]]
@@ -915,12 +937,14 @@ class Simulator:
                     unserved.add(rec.ordinal)
                     compact_added.append(rec)
                     invalidate_job(job.name)
-                    dirty = True
+                    mark_dirty("activation")
                     compact_stale = True
+                    if tr is not None:
+                        tr.mf_activate(t, job.name, name)
                     log(f"activate {job.name}/{name}")
 
         def finish_metaflow(rec: ActiveMF) -> None:
-            nonlocal dirty, compact_stale
+            nonlocal compact_stale
             rec.mf.finish_time = t
             for f in rec.mf.flows:
                 f.remaining = 0.0
@@ -943,7 +967,9 @@ class Simulator:
                     compact_added.remove(rec)
             rec.view_ix = None
             unserved.discard(rec.ordinal)
-            dirty = True
+            mark_dirty("mf_finish")
+            if tr is not None:
+                tr.mf_finish(t, rec.job.name, rec.name)
             log(f"finish {rec.job.name}/{rec.name}")
             node_finished(rec.job, rec.name)
 
@@ -966,12 +992,13 @@ class Simulator:
                                       self._mfs[o].name))
 
         def admit(job: JobDAG) -> None:
-            nonlocal dirty
             live_jobs.append(job)
             view.mf_records[job.name] = [self._mfs[o]
                                          for o in self._mf_of_job[job.name]]
+            if tr is not None:
+                tr.job_arrive(t, job.name)
             if sched.on_job_arrival(job):
-                dirty = True
+                mark_dirty("arrival")
             ch: dict[str, list[str]] = {}
             pend: dict[str, int] = {}
             n_nodes = 0
@@ -1012,15 +1039,30 @@ class Simulator:
             if view.active:
                 view.want_order = bool(unserved)
                 if dirty or decision is None or not self.cache_decisions:
-                    decision = sched.schedule(view)
+                    if tr is None:
+                        decision = sched.schedule(view)
+                    else:
+                        why = dirty_why if dirty else "uncached"
+                        w0 = perf_counter()
+                        decision = sched.schedule(view)
+                        tr.sched(t, "full", perf_counter() - w0, why,
+                                 len(view.active))
                     sched_full += 1
                     dirty = False
                 else:
-                    decision = sched.refresh(view, decision)
+                    if tr is None:
+                        decision = sched.refresh(view, decision)
+                    else:
+                        w0 = perf_counter()
+                        decision = sched.refresh(view, decision)
+                        tr.sched(t, "refresh", perf_counter() - w0, "",
+                                 len(view.active))
                     sched_refresh += 1
                 rates = decision.rates
                 if self.debug_checks:
-                    self._audit_decision(view, decision)
+                    findings = self._audit_decision(view, decision)
+                    if tr is not None:
+                        tr.audit(t, len(findings))
                 if unserved:
                     record_service(decision, rates)
             else:
@@ -1049,6 +1091,23 @@ class Simulator:
                 raise RuntimeError(
                     f"deadlock at t={t}: no progress possible for {blocked}")
             dt = max(dt, 0.0)
+
+            # ---- telemetry: one piecewise-constant rate segment per
+            # event-loop advance; together they tile [0, makespan], so
+            # integrals over them (busy seconds, bytes) are exact.
+            if tr is not None and dt > 0.0:
+                if rates.size:
+                    w = (np.repeat(rates, 2) if view.uniform2
+                         else np.repeat(rates, np.diff(view.lp)))
+                    seg_load = np.bincount(view.li, weights=w,
+                                           minlength=self.fabric.n_links)
+                    seg_pairs = tuple(rec.pair for rec in view.active)
+                    seg_mf_rates = np.add.reduceat(rates, c_starts)
+                else:
+                    seg_load = np.zeros(self.fabric.n_links)
+                    seg_pairs = ()
+                    seg_mf_rates = np.empty(0, dtype=np.float64)
+                tr.segment(t, t + dt, seg_load, seg_pairs, seg_mf_rates)
 
             # ---- advance the fluid state
             t += dt
@@ -1080,7 +1139,9 @@ class Simulator:
                 view.link_cap = self.fabric.cap.copy()
                 job_scratch.clear()     # capacity-dependent keys everywhere
                 sched.on_perturbation(p)
-                dirty = True
+                mark_dirty("perturbation")
+                if tr is not None:
+                    tr.perturbation(t, p.port, p.factor)
                 log(f"degrade port {p.port} x{p.factor}" if p.factor
                     is not None else f"restore port {p.port}")
 
@@ -1096,10 +1157,13 @@ class Simulator:
                         rec = self._mfs[ordinal]
                         rec.pm = None   # live-link set shrank
                         last_flow[rec.job.name] = t
+                        if tr is not None:
+                            tr.flow_finish(t, rec.job.name, rec.name,
+                                           int(cnt))
                         if self._mf_live[ordinal] == 0 and ordinal in active:
                             finish_metaflow(rec)
                         elif sched.on_flow_finish(rec.job, rec.name):
-                            dirty = True
+                            mark_dirty("flow_finish")
 
             # ---- commit compute completions
             if running:
@@ -1108,6 +1172,8 @@ class Simulator:
                     if task.remaining <= EPS:
                         task.finish_time = t
                         task_finish[(job.name, task.name)] = t
+                        if tr is not None:
+                            tr.compute_finish(t, job.name, task.name)
                         log(f"finish {job.name}/{task.name}")
                         node_finished(job, task.name)
                     else:
@@ -1124,9 +1190,13 @@ class Simulator:
                             break
                     del view.mf_records[j.name]
                     invalidate_job(j.name)
+                    if tr is not None:
+                        tr.job_done(t, j.name)
                     log(f"done {j.name}")
                 done_jobs.clear()
 
+        if tr is not None:
+            tr.run_end(t)
         jct = {j.name: (j.finish_time or 0.0) - j.arrival for j in self.jobs}
         cct = {j.name: last_flow.get(j.name, j.arrival) - j.arrival
                for j in self.jobs}
@@ -1134,7 +1204,8 @@ class Simulator:
                          task_finish=task_finish, makespan=t, events=events,
                          timeline=timeline, sched_full=sched_full,
                          sched_refresh=sched_refresh,
-                         mf_service_order=service_order)
+                         mf_service_order=service_order,
+                         n_perturbations=next_pert)
 
 def simulate(jobs: list[JobDAG], scheduler, n_ports: int | None = None,
              fabric: Fabric | None = None, topology: Topology | None = None,

@@ -34,13 +34,22 @@ def run_cell(
     quick: bool = False,
     debug_checks: bool = False,
     analyze: bool = False,
+    trace_dir: str | Path | None = None,
 ) -> dict:
     """Execute one measurement cell; returns its JSON record.
 
     ``analyze=True`` additionally computes the LP-free per-job lower
     bounds (``repro.analysis.bounds``), asserts the achieved JCT/CCT
     never beat them, and carries them in the result record — opt-in so
-    default artifacts stay byte-identical."""
+    default artifacts stay byte-identical.
+
+    ``trace_dir`` runs the cell with a ``repro.obs.MemoryTracer``
+    attached (results stay bit-identical), writes
+    ``<dir>/<scenario>_<policy>_<topology>_seed<seed>.trace.json``
+    (Chrome ``trace_event`` JSON, Perfetto-loadable), and carries the
+    scheduler-counter summary as ``trace_counters`` on the result —
+    opt-in for the same byte-identity reason (the counter summary
+    includes nondeterministic policy wall times)."""
     t0 = time.perf_counter()
     fabric, jobs = build_scenario(
         cell.scenario,
@@ -53,11 +62,19 @@ def run_cell(
         from repro.analysis.bounds import scenario_lower_bounds
 
         jct_b, cct_b = scenario_lower_bounds(jobs, fabric.topology)
+    tracer = None
+    if trace_dir is not None:
+        # Deferred import: repro.obs builds on repro.core; the traced
+        # path is opt-in, same layering rule as analyze/debug_checks.
+        from repro.obs import MemoryTracer
+
+        tracer = MemoryTracer()
     res = simulate(
         jobs,
         make_scheduler(cell.policy),
         fabric=fabric,
         debug_checks=debug_checks,
+        tracer=tracer,
     )
     wall = time.perf_counter() - t0
     if len(res.jct) != len(jobs):
@@ -72,13 +89,26 @@ def run_cell(
         what = f"{cell.scenario}/{cell.policy}/seed{cell.seed} jct"
         assert_bounds_hold(res.jct, jct_b, what)
         assert_bounds_hold(res.cct, cct_b, what[:-3] + "cct")
+    counters = None
+    if tracer is not None:
+        from repro.obs import scheduler_counters, write_chrome_trace
+
+        counters = scheduler_counters(tracer)
+        out_dir = Path(trace_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        stem = f"{cell.scenario}_{cell.policy}_{cell.topology}_seed{cell.seed}"
+        write_chrome_trace(tracer, out_dir / f"{stem}.trace.json")
     return {
         "scenario": cell.scenario,
         "policy": cell.policy,
         "topology": cell.topology,
         "seed": cell.seed,
         "result": RunResult.from_sim(
-            res, wall_s=wall, jct_bound=jct_b, cct_bound=cct_b
+            res,
+            wall_s=wall,
+            jct_bound=jct_b,
+            cct_bound=cct_b,
+            trace_counters=counters,
         ).to_json(),
     }
 
@@ -91,6 +121,7 @@ def scenario_rows(
     topology: str | None = None,
     debug_checks: bool = False,
     analyze: bool = False,
+    trace_dir: str | Path | None = None,
 ) -> list[tuple]:
     """Harness rows — the shared, seed-threaded row emission behind
     ``benchmarks/ml_workloads`` (and anything else reporting
@@ -113,7 +144,11 @@ def scenario_rows(
         for pname in policies:
             cell = Cell(scen, pname, concrete, seed)
             rec = run_cell(
-                cell, quick=quick, debug_checks=debug_checks, analyze=analyze
+                cell,
+                quick=quick,
+                debug_checks=debug_checks,
+                analyze=analyze,
+                trace_dir=trace_dir,
             )
             result = rec["result"]
             cells.append((pname, result["avg_jct"], result["avg_cct"]))
@@ -135,23 +170,42 @@ def scenario_rows(
         extra: dict = {}
         if gaps:
             extra = {"jct_lower_bound": bound_mean, "optimality_gap": gaps}
-            derived += ";gap=" + ",".join(
-                f"{p}:{g:.3f}" for p, g in gaps.items()
-            )
+            derived += ";gap=" + ",".join(f"{p}:{g:.3f}" for p, g in gaps.items())
         name = f"ml/{scen}" if concrete == "big_switch" else f"ml/{scen}@{concrete}"
         rows.append((name, us, derived, extra))
     return rows
 
 
-def _run_shard(spec_json: str, shard_ix: int, analyze: bool = False) -> dict:
-    """Worker entry point (module-level for pickling): one shard doc."""
+def _run_shard(
+    spec_json: str,
+    shard_ix: int,
+    analyze: bool = False,
+    trace_dir: str | None = None,
+    verbose: bool = False,
+) -> dict:
+    """Worker entry point (module-level for pickling): one shard doc.
+
+    ``verbose`` prints a heartbeat line after every cell (shard id,
+    cells done, elapsed) so long sweeps are not silent for minutes —
+    off by default, ``--verbose`` on ``benchmarks/sweep.py``."""
     spec = SweepSpec.from_json(json.loads(spec_json))
     cells = spec.shards()[shard_ix]
+    t0 = time.perf_counter()
+    out = []
+    for k, c in enumerate(cells):
+        out.append(run_cell(c, quick=spec.quick, analyze=analyze, trace_dir=trace_dir))
+        if verbose:
+            elapsed = time.perf_counter() - t0
+            print(
+                f"  [shard {shard_ix:04d}] {k + 1}/{len(cells)} cells, "
+                f"{elapsed:.1f}s elapsed",
+                flush=True,
+            )
     return {
         "shard": shard_ix,
         "spec_hash": spec.spec_hash(),
         "n_cells": len(cells),
-        "cells": [run_cell(c, quick=spec.quick, analyze=analyze) for c in cells],
+        "cells": out,
     }
 
 
@@ -196,6 +250,8 @@ def run_sweep(
     stop_after: int | None = None,
     progress=None,
     analyze: bool = False,
+    trace_dir: str | None = None,
+    verbose: bool = False,
 ) -> list[dict]:
     """Execute (or finish) a sweep; returns completed shard docs sorted
     by shard index.
@@ -207,10 +263,12 @@ def run_sweep(
     length equals ``len(spec.shards())``.
 
     ``analyze=True`` makes every cell carry its LP-free lower bounds
-    (see ``run_cell``).  Analyze is a runner knob, not part of the
-    ``SweepSpec`` — ``spec_hash`` (and thus every existing fingerprint)
-    is unaffected; resuming a plain sweep with ``analyze=True`` only
-    adds bounds to the shards that still need computing."""
+    (see ``run_cell``).  ``trace_dir`` makes every cell write a Chrome
+    trace and carry ``trace_counters`` (see ``run_cell``); ``verbose``
+    turns on per-cell worker heartbeats.  All three are runner knobs,
+    not part of the ``SweepSpec`` — ``spec_hash`` (and thus every
+    existing fingerprint) is unaffected; resuming a plain sweep with
+    them only affects the shards that still need computing."""
     shard_dir = Path(shard_dir)
     shard_dir.mkdir(parents=True, exist_ok=True)
     n_shards = len(spec.shards())
@@ -229,7 +287,7 @@ def run_sweep(
 
     if workers == 1:
         for ix in missing:
-            doc = _run_shard(spec_json, ix, analyze)
+            doc = _run_shard(spec_json, ix, analyze, trace_dir, verbose)
             _write_shard(shard_dir, doc)
             done[ix] = doc
             if progress:
@@ -242,7 +300,7 @@ def run_sweep(
         ctx = multiprocessing.get_context("spawn")
         with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as pool:
             futs = {
-                pool.submit(_run_shard, spec_json, ix, analyze): ix
+                pool.submit(_run_shard, spec_json, ix, analyze, trace_dir, verbose): ix
                 for ix in missing
             }
             for fut in as_completed(futs):

@@ -1,0 +1,71 @@
+"""repro.obs — structured simulation telemetry (DESIGN.md §14).
+
+Event tracing for the fluid simulator (zero overhead when off), exact
+derived views (per-link utilization timelines, the paper's Fig. 1
+per-job phase decomposition, scheduler counters), and exporters
+(Chrome ``trace_event`` JSON for Perfetto, compact JSONL).
+
+Quickstart::
+
+    PYTHONPATH=src python -m repro.obs --scenario mixed --policy msa \\
+        -o trace.json
+
+or programmatically::
+
+    from repro.core import simulate
+    from repro.obs import MemoryTracer, link_utilization
+
+    tr = MemoryTracer()
+    res = simulate(jobs, scheduler, fabric=fabric, tracer=tr)
+    usage = link_utilization(tr)
+"""
+
+from repro.obs.export import (
+    chrome_trace,
+    jsonl_events,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.trace import (
+    AuditEvent,
+    FlowFinishEvent,
+    JobEvent,
+    MemoryTracer,
+    MfEvent,
+    NodeEvent,
+    PerturbEvent,
+    SchedEvent,
+    SegmentEvent,
+    Tracer,
+)
+from repro.obs.views import (
+    LinkUsage,
+    audit_link_seconds,
+    job_phases,
+    link_timeline,
+    link_utilization,
+    scheduler_counters,
+)
+
+__all__ = [
+    "AuditEvent",
+    "FlowFinishEvent",
+    "JobEvent",
+    "LinkUsage",
+    "MemoryTracer",
+    "MfEvent",
+    "NodeEvent",
+    "PerturbEvent",
+    "SchedEvent",
+    "SegmentEvent",
+    "Tracer",
+    "audit_link_seconds",
+    "chrome_trace",
+    "job_phases",
+    "jsonl_events",
+    "link_timeline",
+    "link_utilization",
+    "scheduler_counters",
+    "write_chrome_trace",
+    "write_jsonl",
+]

@@ -1,0 +1,297 @@
+"""repro.obs telemetry: bit-identity, exact views, exporters, plumbing.
+
+The tracer contract (DESIGN.md §14): tracing is observational — traced
+runs reproduce untraced results bit-identically for every registered
+policy — and the derived views are exact, cross-checked against an
+independent integration of ``DecisionRecord`` snapshots and against
+byte conservation per link.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from test_sim_core_equiv import ALL_POLICIES, _random_batch
+
+from repro.analysis.sanitize import RecordingScheduler
+from repro.appdag import build_scenario
+from repro.core import (
+    Fabric,
+    JobDAG,
+    Perturbation,
+    RunResult,
+    Simulator,
+    make_scheduler,
+    simulate,
+)
+from repro.core.metaflow import EPS, figure1_jobs
+from repro.experiments import Cell, run_cell
+from repro.obs import (
+    MemoryTracer,
+    PerturbEvent,
+    SchedEvent,
+    audit_link_seconds,
+    chrome_trace,
+    job_phases,
+    jsonl_events,
+    link_timeline,
+    link_utilization,
+    scheduler_counters,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.__main__ import chrome_track_errors, main as obs_main
+
+
+def traced_run(pname="msa", n_jobs=20, seed=11, record=False):
+    n_ports, jobs = _random_batch(n_jobs=n_jobs, seed=seed)
+    sched = make_scheduler(pname)
+    if record:
+        sched = RecordingScheduler(sched)
+    tracer = MemoryTracer()
+    res = simulate(jobs, sched, n_ports=n_ports, tracer=tracer)
+    return tracer, res, sched
+
+
+class TestBitIdentity:
+    """Tracing must be observational: identical results on vs off."""
+
+    @pytest.mark.parametrize("pname", ALL_POLICIES)
+    def test_all_policies_identical(self, pname):
+        tracer, res_on, _ = traced_run(pname)
+        n_ports, jobs = _random_batch(n_jobs=20, seed=11)
+        res_off = simulate(jobs, make_scheduler(pname), n_ports=n_ports)
+        assert res_on.jct == res_off.jct
+        assert res_on.cct == res_off.cct
+        assert res_on.mf_service_order == res_off.mf_service_order
+        assert res_on.events == res_off.events
+        assert res_on.sched_full == res_off.sched_full
+        assert res_on.sched_refresh == res_off.sched_refresh
+        assert len(tracer.events) > 0
+
+    def test_debug_checks_compose_with_tracer(self):
+        tracer, res, _ = traced_run()
+        n_ports, jobs = _random_batch(n_jobs=20, seed=11)
+        res_dbg = simulate(
+            jobs,
+            make_scheduler("msa"),
+            n_ports=n_ports,
+            tracer=MemoryTracer(),
+            debug_checks=True,
+        )
+        assert res_dbg.jct == res.jct
+
+
+class TestSegments:
+    """Segment events tile the run; integrals over them are exact."""
+
+    def test_segments_tile_makespan(self):
+        tracer, res, _ = traced_run()
+        segs = tracer.segments()
+        assert segs[0].t0 == 0.0
+        for a, b in zip(segs, segs[1:]):
+            assert b.t0 == pytest.approx(a.t1, abs=1e-12)
+        assert segs[-1].t1 == pytest.approx(res.makespan)
+
+    def test_busy_seconds_match_decision_record_audit(self):
+        tracer, res, sched = traced_run(record=True)
+        usage = link_utilization(tracer)
+        busy, byts = audit_link_seconds(sched.records, tracer.n_links)
+        np.testing.assert_allclose(usage.busy_s, busy, rtol=1e-9, atol=1e-9)
+        np.testing.assert_allclose(usage.bytes, byts, rtol=1e-9, atol=1e-9)
+
+    def test_per_link_bytes_conserve_flow_sizes(self):
+        """Integrated bytes per link == the sizes routed through it."""
+        tracer, res, _ = traced_run()
+        n_ports, jobs = _random_batch(n_jobs=20, seed=11)
+        expected = np.zeros(tracer.n_links)
+        for j in jobs:
+            for mf in j.metaflows.values():
+                for f in mf.flows:
+                    expected[f.src] += f.size  # up[src]
+                    expected[n_ports + f.dst] += f.size  # down[dst]
+        usage = link_utilization(tracer)
+        np.testing.assert_allclose(usage.bytes, expected, rtol=1e-7, atol=1e-6)
+
+    def test_utilization_within_capacity_leaf_spine(self):
+        """No segment ever oversubscribes any link of the routed
+        3:1-oversubscribed leaf-spine."""
+        fabric, jobs = build_scenario(
+            "mixed", seed=0, quick=True, topology="leaf_spine_3to1"
+        )
+        tracer = MemoryTracer()
+        simulate(jobs, make_scheduler("msa"), fabric=fabric, tracer=tracer)
+        cap = tracer.link_cap
+        for seg in tracer.segments():
+            assert (seg.link_load <= cap + 1e-6).all()
+        usage = link_utilization(tracer)
+        assert (usage.util <= 1.0 + 1e-9).all()
+        assert usage.busy_s.max() > 0.0
+
+    def test_link_timeline_piecewise(self):
+        tracer, _, _ = traced_run(n_jobs=5)
+        busiest = int(np.argmax(link_utilization(tracer).bytes))
+        tl = link_timeline(tracer, busiest)
+        assert tl and all(t1 > t0 for t0, t1, _ in tl)
+        byts = sum((t1 - t0) * v for t0, t1, v in tl)
+        assert byts == pytest.approx(link_utilization(tracer).bytes[busiest])
+
+
+class TestJobPhases:
+    def test_figure1_decomposition(self):
+        """The paper's Fig. 1 walkthrough, recovered from the trace:
+        under MSA, J2's shuffle is serviced 4s (1s exclusive + overlap)
+        while J1 is blocked exactly 1s."""
+        tracer = MemoryTracer()
+        simulate(figure1_jobs(), make_scheduler("msa"), n_ports=8, tracer=tracer)
+        ph = job_phases(tracer)
+        assert ph["J1"]["net_serviced_s"] == pytest.approx(3.0)
+        assert ph["J1"]["net_blocked_s"] == pytest.approx(1.0)
+        assert ph["J2"]["net_serviced_s"] == pytest.approx(4.0)
+        assert ph["J2"]["net_blocked_s"] == pytest.approx(0.0)
+
+    @pytest.mark.parametrize("pname", ("msa", "fair"))
+    def test_buckets_sum_to_span(self, pname):
+        tracer, res, _ = traced_run(pname)
+        ph = job_phases(tracer)
+        assert set(ph) == set(res.jct)
+        for job, d in ph.items():
+            total = (
+                d["net_serviced_s"] + d["net_blocked_s"] + d["compute_s"] + d["idle_s"]
+            )
+            assert total == pytest.approx(d["span_s"], abs=1e-6)
+            assert d["span_s"] == pytest.approx(res.jct[job])
+
+
+class TestCounters:
+    def test_counters_match_sim_result(self):
+        tracer, res, _ = traced_run()
+        c = scheduler_counters(tracer)
+        assert c["sched_full"] == res.sched_full
+        assert c["sched_refresh"] == res.sched_refresh
+        assert sum(c["full_reasons"].values()) == res.sched_full
+        assert c["full_reasons"]["init"] == 1
+        total = res.sched_full + res.sched_refresh
+        hit = res.sched_refresh / total
+        assert c["cache_hit_ratio"] == pytest.approx(hit, abs=1e-4)
+        assert c["n_perturbations"] == 0
+        assert c["n_segments"] == len(tracer.segments())
+
+    def test_sched_events_cover_every_decision(self):
+        tracer, res, _ = traced_run()
+        evs = tracer.of(SchedEvent)
+        assert len(evs) == res.sched_full + res.sched_refresh
+        assert all(ev.wall_s >= 0.0 and ev.n_active > 0 for ev in evs)
+        assert all(ev.reason for ev in evs if ev.kind == "full")
+        assert all(ev.reason == "" for ev in evs if ev.kind == "refresh")
+
+
+class TestPerturbationSurfacing:
+    """Regression for the latent inconsistency: applied perturbations
+    used to be invisible in every output."""
+
+    def _run(self, tracer=None):
+        j = JobDAG(name="j")
+        j.add_metaflow("m", flows=[(0, 1, 8.0)])
+        j.add_task("c", load=2.0, deps=["m"])
+        perts = [
+            Perturbation(time=2.0, port=1, factor=0.5),
+            Perturbation(time=4.0, port=1, factor=None),
+        ]
+        return Simulator(
+            Fabric(n_ports=2),
+            [j],
+            make_scheduler("msa"),
+            perturbations=perts,
+            tracer=tracer,
+        ).run()
+
+    def test_trace_and_count(self):
+        tracer = MemoryTracer()
+        res = self._run(tracer)
+        assert res.n_perturbations == 2
+        evs = tracer.of(PerturbEvent)
+        expected = [(pytest.approx(2.0), 1, 0.5), (pytest.approx(4.0), 1, None)]
+        assert [(e.t, e.port, e.factor) for e in evs] == expected
+        assert scheduler_counters(tracer)["n_perturbations"] == 2
+
+    def test_run_result_carries_count(self):
+        res = self._run()
+        doc = RunResult.from_sim(res).to_json()
+        assert doc["n_perturbations"] == 2
+        assert RunResult.from_json(doc).n_perturbations == 2
+
+    def test_unperturbed_serialization_unchanged(self):
+        """Perturbation-free artifacts must stay byte-identical."""
+        res = simulate(figure1_jobs(), make_scheduler("msa"), n_ports=8)
+        doc = RunResult.from_sim(res).to_json()
+        assert "n_perturbations" not in doc
+        assert "trace_counters" not in doc
+        assert RunResult.from_json(doc).n_perturbations == 0
+
+
+class TestExporters:
+    def test_chrome_trace_round_trips_monotone(self, tmp_path):
+        tracer, _, _ = traced_run(n_jobs=8)
+        path = tmp_path / "t.trace.json"
+        write_chrome_trace(tracer, path)
+        with open(path) as fh:
+            doc = json.loads(fh.read())
+        assert chrome_track_errors(doc) == []
+        phases = {ev["ph"] for ev in doc["traceEvents"]}
+        assert {"M", "C", "X", "i"} <= phases
+        pids = {ev["pid"] for ev in doc["traceEvents"]}
+        assert pids == {1, 2, 3}
+
+    def test_chrome_counter_tracks_close_at_zero(self):
+        tracer, res, _ = traced_run(n_jobs=5)
+        doc = chrome_trace(tracer)
+        counters = [ev for ev in doc["traceEvents"] if ev["ph"] == "C"]
+        assert counters
+        final: dict[str, tuple[float, float]] = {}
+        for ev in counters:
+            final[ev["name"]] = (ev["ts"], ev["args"]["load"])
+        for name, (ts, load) in final.items():
+            # Emit-on-change: the final zero lands when the link drains,
+            # which is at makespan only for links busy until the end.
+            assert load == pytest.approx(0.0, abs=EPS), name
+            assert ts <= res.makespan * 1e6 + 1.0
+
+    def test_jsonl_round_trip(self, tmp_path):
+        tracer, _, _ = traced_run(n_jobs=5)
+        path = tmp_path / "t.jsonl"
+        n = write_jsonl(tracer, path)
+        lines = path.read_text().splitlines()
+        assert len(lines) == n == len(list(jsonl_events(tracer)))
+        docs = [json.loads(ln) for ln in lines]
+        assert docs[0]["ev"] == "meta"
+        assert docs[0]["n_links"] == tracer.n_links
+        n_seg = sum(1 for d in docs if d["ev"] == "seg")
+        assert n_seg == len(tracer.segments())
+
+
+class TestPlumbing:
+    def test_run_cell_trace_dir(self, tmp_path):
+        cell = Cell("mixed", "msa", "big_switch", 0)
+        rec = run_cell(cell, quick=True, trace_dir=tmp_path)
+        plain = run_cell(cell, quick=True)
+        assert rec["result"]["avg_jct"] == plain["result"]["avg_jct"]
+        assert "trace_counters" not in plain["result"]
+        counters = rec["result"]["trace_counters"]
+        assert counters["sched_full"] == rec["result"]["sched_full"]
+        out = tmp_path / "mixed_msa_big_switch_seed0.trace.json"
+        assert out.exists()
+        with open(out) as fh:
+            assert chrome_track_errors(json.load(fh)) == []
+
+    def test_cli_verify_exit_zero(self, tmp_path, capsys):
+        out = tmp_path / "cli.trace.json"
+        argv = ["--scenario", "mixed", "--policy", "varys", "--quick", "--verify"]
+        argv += ["-o", str(out), "--jsonl", str(tmp_path / "cli.jsonl")]
+        rc = obs_main(argv)
+        assert rc == 0
+        assert out.exists()
+        captured = capsys.readouterr()
+        assert "audit: per-link busy-seconds match" in captured.out
+        assert "bit-identical" in captured.out
