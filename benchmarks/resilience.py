@@ -1,0 +1,153 @@
+"""Resilience sweep — policy-vs-fault-intensity curves under chaos.
+
+Runs the ``repro.experiments.resilience`` sweep: every cell is one
+simulation of the mixed cluster under the seeded chaos fault family
+(``repro.faults.chaos_spec`` — hard link failures with scheduled
+repair, flaky-link degrade storms, straggler bursts, windowed
+retransmission) at one fault intensity, sharded and resumable exactly
+like ``benchmarks/sweep.py``.  The aggregate pins, per policy and
+intensity, mean/95%-CI avg JCT, the paired JCT-degradation-vs-fault-free
+ratio, stall/retransmit/recovery accounting, and the headline
+MSA-vs-varys ratio at every intensity level — does the metaflow win
+survive chaos?
+
+Profiles:
+  (default)  5 policies x 4 intensities (0, 0.5, 1, 2) x 5 seeds on the
+             mixed cluster -> the committed ``BENCH_resilience.json``.
+  --smoke    CI chaos-smoke profile: msa/varys, 3 intensities, 2 quick
+             seeds, validated by ``check_resilience`` (exit 1 on any
+             failure).  Writes ``BENCH_resilience_smoke.json``.
+
+Usage:
+  PYTHONPATH=src python benchmarks/resilience.py [--smoke] [--analyze]
+      [--seeds N] [--seed0 N] [--workers N] [--shard-dir DIR]
+      [--no-resume] [--out PATH] [--verbose]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.experiments import (
+    aggregate_resilience,
+    check_resilience,
+    resilience_spec,
+    run_sweep,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI chaos-smoke profile: msa/varys, 2 quick seeds, "
+        "3 intensities, validated",
+    )
+    ap.add_argument(
+        "--seeds",
+        type=int,
+        default=None,
+        metavar="N",
+        help="seeds per (policy, intensity) cell (default: profile's)",
+    )
+    ap.add_argument(
+        "--seed0",
+        type=int,
+        default=0,
+        help="first seed (cells use seed0..seed0+N-1)",
+    )
+    ap.add_argument(
+        "--workers",
+        type=int,
+        default=None,
+        help="worker processes (default: cpu count; 1 = in-process)",
+    )
+    ap.add_argument(
+        "--shard-dir",
+        default=None,
+        metavar="DIR",
+        help="resumable per-shard outputs (default .sweep_shards/<spec_hash>)",
+    )
+    ap.add_argument(
+        "--no-resume",
+        action="store_true",
+        help="recompute every shard even if its file exists",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        metavar="PATH",
+        help="aggregate JSON (default BENCH_resilience.json; smoke writes "
+        "BENCH_resilience_smoke.json)",
+    )
+    ap.add_argument(
+        "--analyze",
+        action="store_true",
+        help="carry LP-free lower bounds per cell (asserted to hold even "
+        "under faults — chaos only slows jobs down)",
+    )
+    ap.add_argument(
+        "--verbose",
+        action="store_true",
+        help="per-cell worker heartbeats",
+    )
+    args = ap.parse_args()
+
+    spec = resilience_spec(smoke=args.smoke, seeds=args.seeds,
+                           seed0=args.seed0)
+    default_out = (
+        "BENCH_resilience_smoke.json" if args.smoke else "BENCH_resilience.json"
+    )
+    out = args.out or default_out
+    shard_dir = args.shard_dir or f".sweep_shards/{spec.spec_hash()}"
+    n_cells = len(spec.cells())
+    print(
+        f"resilience sweep {spec.spec_hash()}: {n_cells} cells "
+        f"({len(spec.policies)} policies x "
+        f"{len(spec.fault_intensities)} intensities x {spec.n_seeds} seeds)"
+    )
+    print(f"shard dir: {shard_dir}")
+
+    t0 = time.perf_counter()
+    docs = run_sweep(
+        spec,
+        shard_dir,
+        workers=args.workers,
+        resume=not args.no_resume,
+        progress=lambda m: print(f"  {m}", flush=True),
+        analyze=args.analyze,
+        verbose=args.verbose,
+    )
+    wall = time.perf_counter() - t0
+
+    doc = aggregate_resilience(spec, docs)
+    with open(out, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True, allow_nan=False)
+        fh.write("\n")
+    print(f"wrote {out} ({doc['n_cells']} cells, {wall:.1f}s wall)")
+
+    curve = doc.get("headline_curve") or {}
+    for k in sorted(curve, key=lambda k: curve[k]["fault_intensity"]):
+        pt = curve[k]
+        r = pt["ratio"]
+        ci = "n/a (1 seed)" if r["ci95"] is None else f"+/- {r['ci95']:.3f}"
+        print(
+            f"  intensity {pt['fault_intensity']:g}: "
+            f"{pt['policy']}-vs-{pt['baseline']} avg-JCT ratio "
+            f"{r['mean']:.3f} {ci}"
+        )
+
+    with open(out) as fh:  # validate what actually landed on disk
+        errs = check_resilience(json.load(fh))
+    for e in errs:
+        print(f"CHECK-FAIL[resilience]: {e}", file=sys.stderr)
+    if errs:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,9 @@ from repro.analysis.bounds import (assert_bounds_hold, job_lower_bounds,
                                    mf_cct_lower_bound,
                                    scenario_lower_bounds)
 from repro.analysis.lint import (Finding, LintError, available_checks,
-                                 check, expected_wire_bytes, lint_jobs,
-                                 lint_lowered, lint_scenario, strict)
+                                 check, expected_wire_bytes, lint_faults,
+                                 lint_jobs, lint_lowered, lint_scenario,
+                                 strict)
 from repro.analysis.sanitize import (DecisionRecord, InvariantViolation,
                                      RecordingScheduler,
                                      available_invariants, audit_decision,
@@ -28,7 +29,8 @@ __all__ = [
     "RecordingScheduler", "assert_bounds_hold", "audit_decision",
     "audit_record", "audit_trace", "available_checks",
     "available_invariants", "check", "expected_wire_bytes",
-    "invariant", "job_lower_bounds", "link_seconds", "lint_jobs",
+    "invariant", "job_lower_bounds", "link_seconds", "lint_faults",
+    "lint_jobs",
     "lint_lowered", "lint_scenario", "mean_gap", "mf_cct_lower_bound",
     "scenario_lower_bounds", "strict",
 ]

@@ -38,6 +38,16 @@ Checks (registry order; ``available_checks()``):
   purpose, but an open-system scenario saturating a link will never
   reach steady state).
 
+Fault/perturbation streams get their own front end, :func:`lint_faults`
+(the ``FaultSpec.compile`` strict gate and the CLI's ``--fault-intensity``
+mode): per-event kind/time/factor/target-range checks plus a per-link
+state machine over the canonical ``fault_key`` order — fail of an
+already-down link, repair of an up link, soft degrades targeting a
+hard-down link, and failure windows never repaired before the stream
+ends are all errors (zero-duration windows land here too: the tie-break
+orders repair before fail at one instant, so ``[t, t)`` reads as a
+repair-when-up).
+
 Collective byte conservation cannot be re-derived from a compiled
 ``JobDAG`` (the logical kind/group/size is gone after lowering), so
 :func:`lint_lowered` audits a ``LoweredCollective`` directly, against
@@ -60,6 +70,7 @@ from dataclasses import dataclass
 
 from repro.core.fabric import Topology
 from repro.core.metaflow import JobDAG
+from repro.core.simulator import FAULT_KINDS, fault_key
 
 SEVERITIES = ("error", "warning")
 
@@ -307,6 +318,144 @@ def lint_lowered(lowered) -> list[Finding]:
     return out
 
 
+# ----------------------------------------------------- fault-stream linting
+def lint_faults(events, topology: Topology | None = None) -> list[Finding]:
+    """Audit a fault/perturbation event stream (see module docstring).
+
+    ``events`` is any iterable of :class:`repro.core.simulator.FaultEvent`
+    (order need not be canonical — disorder is only a warning, since the
+    simulator re-sorts).  Pass the target topology so target-range and
+    host-expansion checks see the real link/port counts.
+    """
+    out: list[Finding] = []
+    n_links = topology.n_links if topology is not None else None
+    n_ports = topology.n_ports if topology is not None else None
+    valid = []
+    for i, ev in enumerate(events):
+        kind = getattr(ev, "kind", None)
+        if kind not in FAULT_KINDS:
+            out.append(Finding("fault_stream", "error",
+                               f"event {i}: unknown fault kind {kind!r}"))
+            continue
+        ok = True
+        if not math.isfinite(ev.time) or ev.time < 0:
+            out.append(Finding("fault_stream", "error",
+                               f"event {i} ({kind}): time {ev.time!r} is "
+                               "not a finite non-negative instant"))
+            ok = False
+        if kind.startswith("degrade"):
+            if (ev.factor is None or not math.isfinite(ev.factor)
+                    or ev.factor <= 0):
+                out.append(Finding("fault_stream", "error",
+                                   f"event {i} ({kind}): degrade factor "
+                                   f"{ev.factor!r} must be finite and > 0"))
+                ok = False
+            elif ev.factor >= 1.0:
+                out.append(Finding("fault_stream", "warning",
+                                   f"event {i} ({kind}): factor "
+                                   f"{ev.factor:g} >= 1 is not a "
+                                   "degradation"))
+        elif ev.factor is not None:
+            out.append(Finding("fault_stream", "error",
+                               f"event {i} ({kind}): carries a factor "
+                               f"({ev.factor!r}) but the kind takes none"))
+            ok = False
+        bound = n_links if kind.endswith("_link") else n_ports
+        what = "link" if kind.endswith("_link") else "port"
+        if ev.target < 0 or (bound is not None and ev.target >= bound):
+            rng = f"0..{bound - 1}" if bound is not None else ">= 0"
+            out.append(Finding("fault_stream", "error",
+                               f"event {i} ({kind}): {what} {ev.target} "
+                               f"outside fabric {rng}"))
+            ok = False
+        if ok:
+            valid.append(ev)
+    keys = [fault_key(ev) for ev in valid]
+    if any(b < a for a, b in zip(keys, keys[1:])):
+        out.append(Finding("fault_stream", "warning",
+                           "stream is not in canonical fault_key order "
+                           "(the simulator re-sorts; a generator emitting "
+                           "disorder is usually buggy)"))
+
+    # Per-link hard-down state machine over the canonical order.  Host
+    # kinds expand to the port's two host links when the topology is
+    # known; without it they still pair up in a host namespace.
+    link_down_by: dict[int, str] = {}     # link -> "fail_link" | "fail_host"
+    down_hosts: set[int] = set()
+
+    def host_links(port: int) -> tuple[int, ...]:
+        return (port, n_ports + port) if n_ports is not None else ()
+
+    for ev in sorted(valid, key=fault_key):
+        k, tgt = ev.kind, ev.target
+        at = f"t={ev.time:g}"
+        if k == "fail_link":
+            if tgt in link_down_by:
+                out.append(Finding("fault_stream", "error",
+                                   f"{at}: fail_link {tgt} but the link is "
+                                   f"already down (via "
+                                   f"{link_down_by[tgt]}) — windows on one "
+                                   "target must not overlap"))
+            else:
+                link_down_by[tgt] = "fail_link"
+        elif k == "repair_link":
+            if link_down_by.get(tgt) == "fail_link":
+                del link_down_by[tgt]
+            elif link_down_by.get(tgt) == "fail_host":
+                out.append(Finding("fault_stream", "error",
+                                   f"{at}: repair_link {tgt} targets a link "
+                                   "downed by fail_host (repair_host must "
+                                   "undo it)"))
+            else:
+                out.append(Finding("fault_stream", "error",
+                                   f"{at}: repair_link {tgt} but the link "
+                                   "is not down (repair must follow its "
+                                   "failure, strictly later)"))
+        elif k == "fail_host":
+            clash = [li for li in host_links(tgt) if li in link_down_by]
+            if tgt in down_hosts or clash:
+                out.append(Finding("fault_stream", "error",
+                                   f"{at}: fail_host {tgt} but the host or "
+                                   "one of its links is already down"))
+            else:
+                down_hosts.add(tgt)
+                for li in host_links(tgt):
+                    link_down_by[li] = "fail_host"
+        elif k == "repair_host":
+            if tgt in down_hosts:
+                down_hosts.discard(tgt)
+                for li in host_links(tgt):
+                    link_down_by.pop(li, None)
+            else:
+                out.append(Finding("fault_stream", "error",
+                                   f"{at}: repair_host {tgt} but the host "
+                                   "is not down (repair must follow its "
+                                   "failure, strictly later)"))
+        elif k in ("degrade_link", "restore_link"):
+            if tgt in link_down_by:
+                out.append(Finding("fault_stream", "error",
+                                   f"{at}: {k} {tgt} targets a hard-down "
+                                   "link (soft events must not land inside "
+                                   "a failure window)"))
+        elif k in ("degrade_port", "restore_port"):
+            hit = [li for li in host_links(tgt) if li in link_down_by]
+            if tgt in down_hosts or hit:
+                out.append(Finding("fault_stream", "error",
+                                   f"{at}: {k} {tgt} targets a hard-down "
+                                   "host (soft events must not land inside "
+                                   "a failure window)"))
+    for tgt in sorted(down_hosts):
+        out.append(Finding("fault_stream", "error",
+                           f"host {tgt} fails but is never repaired "
+                           "before the stream ends"))
+    for tgt, via in sorted(link_down_by.items()):
+        if via == "fail_link":
+            out.append(Finding("fault_stream", "error",
+                               f"link {tgt} fails but is never repaired "
+                               "before the stream ends"))
+    return out
+
+
 # -------------------------------------------------------------- front ends
 def lint_jobs(jobs: list[JobDAG], topology: Topology | None = None,
               checks: Iterable[str] | None = None) -> list[Finding]:
@@ -350,6 +499,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="quick workload profile (CI)")
+    ap.add_argument("--fault-intensity", type=float, default=0.0,
+                    help="also compile each scenario's chaos fault stream "
+                         "at this intensity and lint it (0 = skip)")
     ap.add_argument("--verbose", action="store_true",
                     help="print every warning (errors always print)")
     args = ap.parse_args(argv)
@@ -357,6 +509,15 @@ def main(argv: list[str] | None = None) -> int:
     n_err = 0
     for scen in scenarios:
         findings = lint_scenario(scen, seed=args.seed, quick=args.quick)
+        if args.fault_intensity:
+            from repro.appdag.mixer import build_scenario
+            from repro.faults import chaos_spec
+            fabric, jobs = build_scenario(scen, seed=args.seed,
+                                          quick=args.quick, lint=False)
+            spec = chaos_spec(fabric, jobs, args.fault_intensity,
+                              seed=args.seed)
+            findings += lint_faults(spec.compile(lint=False),
+                                    fabric.topology)
         errs = [f for f in findings if f.severity == "error"]
         warns = [f for f in findings if f.severity == "warning"]
         n_err += len(errs)

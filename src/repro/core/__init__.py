@@ -17,16 +17,20 @@ from repro.core.sched import (CriticalPathScheduler, Decision, FairScheduler,
                               make_scheduler, metaflow_priorities, register)
 from repro.core.simref import (ReferenceSimulator, UnsupportedTopologyError,
                                simulate_reference)
-from repro.core.simulator import Perturbation, SimResult, Simulator, simulate
+from repro.core.simulator import (FAULT_KINDS, FaultEvent, Perturbation,
+                                  RetransmitPolicy, SimResult, Simulator,
+                                  fault_key, simulate)
 
 __all__ = [
     "BigSwitch", "ComputeTask", "CriticalPathScheduler", "Decision",
-    "Fabric", "FairScheduler", "FatTree", "FifoScheduler", "Flow", "JobDAG",
+    "FAULT_KINDS", "Fabric", "FairScheduler", "FatTree", "FaultEvent",
+    "FifoScheduler", "Flow", "JobDAG",
     "LeafSpine", "MSAScheduler", "Metaflow", "Perturbation",
-    "ReferenceSimulator", "RunResult", "Scheduler", "SimResult", "Simulator",
+    "ReferenceSimulator", "RetransmitPolicy", "RunResult", "Scheduler",
+    "SimResult", "Simulator",
     "Topology", "UnsupportedTopologyError",
     "VarysScheduler", "available_policies", "big_switch", "fat_tree",
-    "figure1_jobs", "figure2_job", "leaf_spine", "make_scheduler",
-    "make_topology", "metaflow_priorities", "register", "simulate",
-    "simulate_reference",
+    "fault_key", "figure1_jobs", "figure2_job", "leaf_spine",
+    "make_scheduler", "make_topology", "metaflow_priorities", "register",
+    "simulate", "simulate_reference",
 ]

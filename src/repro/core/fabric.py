@@ -87,6 +87,30 @@ class Topology:
     def _route(self, src: int, dst: int) -> tuple[int, ...]:
         raise NotImplementedError
 
+    # ---------------------------------------------------- fault rerouting
+    #: Whether any (src, dst) pair has more than one candidate route.
+    #: Topologies that leave this False never reroute: a flow on a
+    #: hard-down link simply stalls until the link is repaired.
+    has_alternate_paths: bool = False
+
+    def route_candidates(self, src: int, dst: int) -> tuple[tuple[int, ...], ...]:
+        """Deterministic, ordered candidate routes for a (src, dst) pair.
+
+        The first candidate is always ``path(src, dst)`` (the nominal
+        ECMP choice), and every candidate has the same link count — the
+        simulator's CSR incidence relies on route length being a pure
+        function of the pair.  The base topology has a single route."""
+        return (self.path(src, dst),)
+
+    def route_avoiding(self, src: int, dst: int,
+                       down: frozenset[int] | set[int]) -> tuple[int, ...] | None:
+        """First candidate route avoiding every link in ``down``, or
+        ``None`` when no candidate survives (the flow must stall)."""
+        for cand in self.route_candidates(src, dst):
+            if not any(link in down for link in cand):
+                return cand
+        return None
+
     # ------------------------------------------------------------- structure
     def host_links(self, port: int) -> tuple[int, ...]:
         """Links attached to one host endpoint (its NIC up/down pair) —
@@ -173,6 +197,27 @@ class LeafSpine(Topology):
                 self._leaf_down + ld * self.n_spines + s,
                 down)
 
+    @property
+    def has_alternate_paths(self) -> bool:  # type: ignore[override]
+        return self.n_spines > 1
+
+    def route_candidates(self, src: int, dst: int) -> tuple[tuple[int, ...], ...]:
+        """Cross-leaf pairs can re-hash over every spine; the nominal
+        ECMP spine comes first, the rest in deterministic rotation."""
+        ls, ld = self.leaf_of(src), self.leaf_of(dst)
+        if ls == ld:
+            return (self.path(src, dst),)
+        up, down = src, self.n_ports + dst
+        s0 = _ecmp(src, dst, self.n_spines)
+        out = []
+        for k in range(self.n_spines):
+            s = (s0 + k) % self.n_spines
+            out.append((up,
+                        self._leaf_up + ls * self.n_spines + s,
+                        self._leaf_down + ld * self.n_spines + s,
+                        down))
+        return tuple(out)
+
     def describe(self) -> str:
         return (f"leaf_spine({self.n_leaves}x{self.hosts_per_leaf} hosts, "
                 f"{self.n_spines} spines, "
@@ -247,6 +292,44 @@ class FatTree(Topology):
                 self._cd + a_d * half + m,
                 self._ad + ed * half + j,
                 down)
+
+    @property
+    def has_alternate_paths(self) -> bool:  # type: ignore[override]
+        return self.k >= 4
+
+    def route_candidates(self, src: int, dst: int) -> tuple[tuple[int, ...], ...]:
+        """Re-hash over every aggregation switch (and, cross-pod, every
+        core within its group), nominal ECMP choice first, the rest in
+        deterministic rotation — all candidates have the nominal route's
+        link count."""
+        ps, es = self._locate(src)
+        pd, ed = self._locate(dst)
+        if es == ed:
+            return (self.path(src, dst),)
+        up, down = src, self.n_ports + dst
+        half = self.k // 2
+        j0 = _ecmp(src, dst, half)
+        out = []
+        if ps == pd:
+            for a in range(half):
+                j = (j0 + a) % half
+                out.append((up, self._eu + es * half + j,
+                            self._ad + ed * half + j, down))
+            return tuple(out)
+        m0 = _ecmp(src, dst, half, salt=1)
+        for a in range(half):
+            j = (j0 + a) % half
+            a_s = ps * half + j
+            a_d = pd * half + j
+            for b in range(half):
+                m = (m0 + b) % half
+                out.append((up,
+                            self._eu + es * half + j,
+                            self._au + a_s * half + m,
+                            self._cd + a_d * half + m,
+                            self._ad + ed * half + j,
+                            down))
+        return tuple(out)
 
     def describe(self) -> str:
         return f"fat_tree(k={self.k}, {self.n_ports} hosts)"
@@ -328,6 +411,10 @@ class Fabric:
         # Current link capacities; nominal kept for ``restore()``.
         self.cap = topology.cap.copy()
         self._base_cap = topology.cap.copy()
+        # Hard-down links (capacity forced to 0, excluded from rerouted
+        # paths).  Only ``fail_link``/``fail_host`` set it; only
+        # ``repair_link``/``repair_host`` clear it.
+        self.down = np.zeros(self.n_links, dtype=bool)
 
     # ------------------------------------------------- big-switch port views
     @property
@@ -363,38 +450,121 @@ class Fabric:
 
         ``factor`` must be positive: a zero or negative capacity would
         deadlock the fluid simulator (flows on the port can never finish)
-        rather than model a failure.  Model a dead node by removing its
-        jobs, not by zeroing its port.  Out-of-range ports raise
-        ``ValueError`` — a typo'd perturbation must not silently bend a
-        different port (or grow a list) instead."""
+        rather than model a failure — hard failures go through
+        ``fail_link``/``fail_host``, whose events carry a scheduled
+        repair.  Out-of-range ports raise ``ValueError`` — a typo'd
+        perturbation must not silently bend a different port (or grow a
+        list) instead.  Degrading an already-degraded port compounds
+        multiplicatively (two 0.5x storms leave 0.25x); a single
+        ``restore`` resets to nominal.  Degrading a port whose host link
+        is hard-down raises: soft and hard fault windows on one target
+        must not overlap (the stream lint enforces this)."""
         if not factor > 0:
             raise ValueError(f"degrade factor must be > 0, got {factor}")
         self._check_port(port)
+        for link in self.topology.host_links(port):
+            if self.down[link]:
+                raise ValueError(
+                    f"cannot degrade port {port}: link {link} is hard-down")
         for link in self.topology.host_links(port):
             self.cap[link] *= factor
 
     def restore(self, port: int | None = None) -> None:
         """Inverse of ``degrade``: reset a port's host links (or, with
-        ``None``, every link) to nominal capacity — the straggler
-        recovered.  Perturbation benchmarks pair a ``degrade`` with a
-        later ``restore`` to model transient slowdowns."""
+        ``None``, every non-failed link) to nominal capacity — the
+        straggler recovered.  Perturbation benchmarks pair a ``degrade``
+        with a later ``restore`` to model transient slowdowns.
+        Restoring a never-degraded port is a documented no-op (resets to
+        nominal, which it already holds).  Restoring a port with a
+        hard-down host link raises — repair goes through
+        ``repair_link``/``repair_host``, never ``restore``."""
         if port is None:
-            self.cap[:] = self._base_cap
+            keep = self.down
+            self.cap[~keep] = self._base_cap[~keep]
             return
         self._check_port(port)
+        for link in self.topology.host_links(port):
+            if self.down[link]:
+                raise ValueError(
+                    f"cannot restore port {port}: link {link} is hard-down "
+                    f"(use repair_link/repair_host)")
         for link in self.topology.host_links(port):
             self.cap[link] = self._base_cap[link]
 
     def degrade_link(self, link: int, factor: float) -> None:
-        """Scale one link (e.g. a single flaky leaf uplink)."""
+        """Scale one link (e.g. a single flaky leaf uplink).
+
+        Double-degrade compounds multiplicatively; degrading a hard-down
+        link raises (its capacity is pinned at 0 until repair)."""
         if not factor > 0:
             raise ValueError(f"degrade factor must be > 0, got {factor}")
         self._check_link(link)
+        if self.down[link]:
+            raise ValueError(f"cannot degrade link {link}: it is hard-down")
         self.cap[link] *= factor
 
     def restore_link(self, link: int) -> None:
+        """Reset one link to nominal capacity.  Restoring a
+        never-degraded link is a documented no-op; restoring a hard-down
+        link raises (use ``repair_link``)."""
         self._check_link(link)
+        if self.down[link]:
+            raise ValueError(
+                f"cannot restore link {link}: it is hard-down "
+                f"(use repair_link)")
         self.cap[link] = self._base_cap[link]
+
+    # --------------------------------------------------- hard failures
+    def fail_link(self, link: int) -> None:
+        """Hard-fail one link: capacity 0 and marked down until
+        ``repair_link``.  Failing an already-down link raises — the
+        fault-stream lint rejects overlapping failure windows, and a
+        silent double-fail would make the later repair ambiguous."""
+        self._check_link(link)
+        if self.down[link]:
+            raise ValueError(f"link {link} is already down")
+        self.down[link] = True
+        self.cap[link] = 0.0
+
+    def repair_link(self, link: int) -> None:
+        """Bring a failed link back at *nominal* capacity (a repair
+        replaces the hardware, discarding any pre-failure degradation).
+        Repairing a link that is not down raises."""
+        self._check_link(link)
+        if not self.down[link]:
+            raise ValueError(f"link {link} is not down")
+        self.down[link] = False
+        self.cap[link] = self._base_cap[link]
+
+    def fail_host(self, port: int) -> None:
+        """Hard-fail both host links of a port (NIC/node failure)."""
+        self._check_port(port)
+        links = self.topology.host_links(port)
+        for link in links:
+            if self.down[link]:
+                raise ValueError(
+                    f"cannot fail host {port}: link {link} is already down")
+        for link in links:
+            self.down[link] = True
+            self.cap[link] = 0.0
+
+    def repair_host(self, port: int) -> None:
+        """Inverse of ``fail_host``; raises unless every host link of
+        the port is down (host repair must pair with host failure, not
+        absorb an unrelated single-link failure)."""
+        self._check_port(port)
+        links = self.topology.host_links(port)
+        for link in links:
+            if not self.down[link]:
+                raise ValueError(
+                    f"cannot repair host {port}: link {link} is not down")
+        for link in links:
+            self.down[link] = False
+            self.cap[link] = self._base_cap[link]
+
+    def down_links(self) -> frozenset[int]:
+        """The current hard-down link set (for ``route_avoiding``)."""
+        return frozenset(int(i) for i in np.nonzero(self.down)[0])
 
     def residual(self) -> "Residual":
         return Residual(cap=self.cap.tolist(), route=self.topology.path)

@@ -46,6 +46,17 @@ class RunResult:
     # repro.obs scheduler-counter summary, carried only by traced runs
     # (includes nondeterministic policy wall times); omitted when None.
     trace_counters: dict | None = None
+    # Resilience accounting (repro.faults): hard fault events applied,
+    # in-flight bytes re-added by the retransmission policy, seconds at
+    # least one live flow was stalled on a hard-down link (union and
+    # flow-weighted integral), and time from the last repair to the end
+    # of the run.  All omitted at the fault-free default of 0, so every
+    # pinned fault-free artifact stays byte-identical.
+    n_faults: int = 0
+    retransmitted_bytes: float = 0.0
+    stall_s: float = 0.0
+    flow_stall_s: float = 0.0
+    recovery_lag_s: float = 0.0
 
     @classmethod
     def from_sim(cls, res: SimResult, wall_s: float = 0.0,
@@ -61,7 +72,12 @@ class RunResult:
                    cct_bound=dict(cct_bound) if cct_bound else None,
                    n_perturbations=res.n_perturbations,
                    trace_counters=dict(trace_counters)
-                   if trace_counters else None)
+                   if trace_counters else None,
+                   n_faults=res.n_faults,
+                   retransmitted_bytes=res.retransmitted_bytes,
+                   stall_s=res.stall_s,
+                   flow_stall_s=res.flow_stall_s,
+                   recovery_lag_s=res.recovery_lag_s)
 
     def to_json(self) -> dict:
         doc = {"n_jobs": self.n_jobs, "avg_jct": self.avg_jct,
@@ -77,6 +93,16 @@ class RunResult:
             doc["n_perturbations"] = self.n_perturbations
         if self.trace_counters is not None:
             doc["trace_counters"] = dict(self.trace_counters)
+        if self.n_faults:
+            doc["n_faults"] = self.n_faults
+        if self.retransmitted_bytes:
+            doc["retransmitted_bytes"] = self.retransmitted_bytes
+        if self.stall_s:
+            doc["stall_s"] = self.stall_s
+        if self.flow_stall_s:
+            doc["flow_stall_s"] = self.flow_stall_s
+        if self.recovery_lag_s:
+            doc["recovery_lag_s"] = self.recovery_lag_s
         return doc
 
     @classmethod
@@ -89,7 +115,12 @@ class RunResult:
                    jct_bound=doc.get("jct_bound"),
                    cct_bound=doc.get("cct_bound"),
                    n_perturbations=doc.get("n_perturbations", 0),
-                   trace_counters=doc.get("trace_counters"))
+                   trace_counters=doc.get("trace_counters"),
+                   n_faults=doc.get("n_faults", 0),
+                   retransmitted_bytes=doc.get("retransmitted_bytes", 0.0),
+                   stall_s=doc.get("stall_s", 0.0),
+                   flow_stall_s=doc.get("flow_stall_s", 0.0),
+                   recovery_lag_s=doc.get("recovery_lag_s", 0.0))
 
     def perf_row(self) -> dict:
         """The scalar row shape of the perf trajectories

@@ -64,7 +64,11 @@ class ReferenceSimulator:
         self.jobs = sorted(jobs, key=lambda j: (j.arrival, j.name))
         self.scheduler = scheduler
         self.machine_speed = machine_speed
-        self.perturbations = sorted(perturbations or [], key=lambda p: p.time)
+        # Same tie-break as the compacted simulator's fault_key:
+        # same-timestamp restores apply before degrades, then by port.
+        self.perturbations = sorted(
+            perturbations or [],
+            key=lambda p: (p.time, p.factor is not None, p.port))
         self.record_timeline = record_timeline
         self.max_events = max_events
         self.cache_decisions = cache_decisions

@@ -99,6 +99,12 @@ class SimResult:
     # ordered within one decision — the policy's realized transfer order.
     mf_service_order: list[tuple[str, str]] = field(default_factory=list)
     n_perturbations: int = 0              # applied degrade/restore events
+    # ---- resilience telemetry (all zero on fault-free runs) -------------
+    n_faults: int = 0                     # applied hard fail/repair events
+    retransmitted_bytes: float = 0.0      # in-flight bytes re-added on failure
+    stall_s: float = 0.0                  # seconds >= 1 live flow crossed a down link
+    flow_stall_s: float = 0.0             # integral of stalled-flow count (flow-seconds)
+    recovery_lag_s: float = 0.0           # makespan minus the last repair time
 
     @property
     def avg_jct(self) -> float:
@@ -120,6 +126,87 @@ class Perturbation:
     time: float
     port: int
     factor: float | None
+
+
+#: Every fault-event kind the simulator applies.  ``degrade_port`` /
+#: ``restore_port`` are the normalized form of :class:`Perturbation`
+#: (soft capacity scaling); ``degrade_link`` / ``restore_link`` are their
+#: single-link analogs; the ``fail_*`` / ``repair_*`` kinds are hard
+#: failures (capacity 0, reroute/retransmit semantics).
+FAULT_KINDS = frozenset({
+    "fail_link", "repair_link", "fail_host", "repair_host",
+    "degrade_link", "restore_link", "degrade_port", "restore_port",
+})
+
+# Deterministic same-timestamp tie-break (see ``fault_key``): repairs
+# first, then restores, then degrades, then failures — capacity-raising
+# before capacity-lowering, so back-to-back windows on one target
+# (repair at t immediately followed by a new failure at t) compose
+# instead of tripping the Fabric's already-down/not-down contracts.
+_KIND_RANK = {
+    "repair_link": 0, "repair_host": 1,
+    "restore_link": 2, "restore_port": 3,
+    "degrade_link": 4, "degrade_port": 5,
+    "fail_link": 6, "fail_host": 7,
+}
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fabric fault/repair event.
+
+    ``target`` is a link id for the ``*_link`` kinds and a port id for
+    the ``*_port`` / ``*_host`` kinds.  ``factor`` is required (> 0) for
+    the degrade kinds and must be None for every other kind."""
+
+    time: float
+    kind: str
+    target: int
+    factor: float | None = None
+
+    @property
+    def port(self) -> int | None:
+        """Port-compatibility view for ``Scheduler.on_perturbation``
+        listeners written against :class:`Perturbation` (None when the
+        event targets a single link, not a port)."""
+        if self.kind.endswith(("_port", "_host")):
+            return self.target
+        return None
+
+
+def fault_key(ev: FaultEvent) -> tuple:
+    """Total order over fault events — THE deterministic tie-break.
+
+    Sorted by (time, kind rank, target, factor): same-timestamp events
+    apply repairs/restores before degrades before failures (see
+    ``_KIND_RANK``), then by target id, then by factor, so any stream —
+    however generated or sharded — replays in exactly one order."""
+    return (ev.time, _KIND_RANK[ev.kind], ev.target,
+            -1.0 if ev.factor is None else ev.factor)
+
+
+@dataclass(frozen=True)
+class RetransmitPolicy:
+    """What happens to in-flight bytes when a link hard-fails.
+
+    * ``none``   — fluid bytes survive the failure (delivery is
+      checkpointed continuously; the default).
+    * ``window`` — each affected flow loses ``min(delivered, window)``
+      bytes: an un-acked transport window's worth is re-added to the
+      flow's remaining bytes.
+    * ``full``   — every affected flow restarts from zero delivered
+      (no partial-delivery checkpoint).
+    """
+
+    mode: str = "none"
+    window: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("none", "window", "full"):
+            raise ValueError(f"unknown retransmit mode {self.mode!r}")
+        if self.mode == "window" and not self.window > 0:
+            raise ValueError(
+                f"window mode needs a positive window, got {self.window}")
 
 
 @dataclass
@@ -586,6 +673,8 @@ class Simulator:
     def __init__(self, fabric: Fabric, jobs: list[JobDAG], scheduler,
                  machine_speed: float = 1.0,
                  perturbations: list[Perturbation] | None = None,
+                 faults: list[FaultEvent] | None = None,
+                 retransmit: RetransmitPolicy | None = None,
                  record_timeline: bool = False,
                  max_events: int = 5_000_000,
                  cache_decisions: bool = True,
@@ -601,6 +690,19 @@ class Simulator:
         self.scheduler = scheduler
         self.machine_speed = machine_speed
         self.perturbations = sorted(perturbations or [], key=lambda p: p.time)
+        # Normalize legacy Perturbations into FaultEvents and merge with
+        # the declared fault stream under the one documented tie-break
+        # (``fault_key``), so mixed streams replay deterministically.
+        merged = [FaultEvent(p.time,
+                             "restore_port" if p.factor is None
+                             else "degrade_port",
+                             p.port, p.factor)
+                  for p in (perturbations or [])]
+        merged.extend(faults or [])
+        for ev in merged:
+            self._check_fault_event(ev)
+        self.fault_events = sorted(merged, key=fault_key)
+        self.retransmit = retransmit
         self.record_timeline = record_timeline
         self.max_events = max_events
         self.cache_decisions = cache_decisions
@@ -618,6 +720,30 @@ class Simulator:
             self._audit_decision = audit_decision
         self._build_tables()
         scheduler.attach(fabric, self.jobs)
+
+    def _check_fault_event(self, ev: FaultEvent) -> None:
+        """Fail-fast validation (the richer structured report lives in
+        ``repro.analysis.lint.lint_faults``)."""
+        if ev.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {ev.kind!r}")
+        if not (np.isfinite(ev.time) and ev.time >= 0.0):
+            raise ValueError(f"fault time must be finite >= 0, got {ev.time}")
+        if ev.kind.startswith("degrade"):
+            if ev.factor is None or not (np.isfinite(ev.factor)
+                                         and ev.factor > 0):
+                raise ValueError(
+                    f"{ev.kind} needs a finite factor > 0, got {ev.factor}")
+        elif ev.factor is not None:
+            raise ValueError(f"{ev.kind} must not carry a factor")
+        if ev.kind.endswith("_link"):
+            hi = self.fabric.n_links
+            what = "link"
+        else:
+            hi = self.fabric.n_ports
+            what = "port"
+        if not (0 <= ev.target < hi):
+            raise ValueError(
+                f"{ev.kind} targets {what} {ev.target} outside 0..{hi - 1}")
 
     # ------------------------------------------------------------- tables
     def _build_tables(self) -> None:
@@ -665,9 +791,16 @@ class Simulator:
         self._src = np.asarray(src, dtype=np.int32)
         self._dst = np.asarray(dst, dtype=np.int32)
         self._rem = np.asarray(rem, dtype=np.float64)
+        self._size = self._rem.copy()   # initial bytes (retransmit base)
         self._lp = np.asarray(lp, dtype=np.int64)
         self._li = np.asarray(li, dtype=np.int32)
         self._pathid = np.asarray(pathid, dtype=np.int64)
+        # pathid -> (src, dst) pair, for fault-time rerouting; the
+        # per-pathid flow index lists are built lazily on the first
+        # reroute (zero cost on fault-free runs).
+        self._route_pairs: list[tuple[int, int]] = [
+            pr for pr, _ in sorted(route_ids.items(), key=lambda kv: kv[1])]
+        self._reroute_state: tuple[list, list] | None = None
         # Degenerate all-paths-are-(up, down) layout (any big switch):
         # the hot paths then read link ids straight off src/dst.
         self._uniform2 = bool(np.all(np.diff(self._lp) == 2))
@@ -718,8 +851,18 @@ class Simulator:
         t = 0.0
         jobs_by_arrival = self.jobs
         next_arrival = 0                       # admission cursor (sorted)
-        all_perts = self.perturbations
-        next_pert = 0                          # perturbation cursor (sorted)
+        all_faults = self.fault_events
+        next_fault = 0                         # fault cursor (fault_key order)
+        # Resilience accounting — all stay zero on fault-free runs.
+        n_soft = 0                             # applied degrade/restore events
+        n_hard = 0                             # applied fail/repair events
+        retrans_total = 0.0
+        stall_union = 0.0                      # seconds with >= 1 stalled flow
+        flow_stall = 0.0                       # integral of stalled-flow count
+        t_last_repair: float | None = None
+        down_any = bool(self.fabric.down.any())
+        down_ids: tuple[int, ...] = (
+            tuple(sorted(self.fabric.down_links())) if down_any else ())
         timeline: list[tuple[float, str]] = []
         mf_finish: dict[tuple[str, str], float] = {}
         task_finish: dict[tuple[str, str], float] = {}
@@ -808,6 +951,106 @@ class Simulator:
                 np.cumsum(cnt, out=lp_new[1:])
                 view.lp = lp_new
             view.pathid = self._pathid[c_glob]
+
+        # ---- fault semantics (all zero-cost until a fault applies) -------
+        def slots_crossing(links) -> np.ndarray:
+            """Mask over compacted slots whose current route crosses any
+            of ``links``."""
+            if view.uniform2:
+                hit = np.zeros(c_rem.size, dtype=bool)
+                nh = view.n_hosts
+                for link in links:
+                    if link < nh:
+                        hit |= c_src == link
+                    elif link < 2 * nh:
+                        hit |= c_dst == link - nh
+                return hit
+            member = np.isin(view.li,
+                             np.asarray(list(links), dtype=view.li.dtype))
+            if not member.any():
+                return np.zeros(c_rem.size, dtype=bool)
+            return np.add.reduceat(member, view.lp[:-1]) > 0
+
+        def apply_retransmit(dead_links) -> None:
+            """Re-add lost in-flight bytes of live flows crossing a link
+            that just hard-failed, per the retransmission policy."""
+            nonlocal retrans_total
+            rp = self.retransmit
+            if rp is None or rp.mode == "none" or c_rem.size == 0:
+                return
+            hit = slots_crossing(dead_links)
+            hit &= c_rem > EPS
+            if not hit.any():
+                return
+            delivered = self._size[c_glob[hit]] - c_rem[hit]
+            np.clip(delivered, 0.0, None, out=delivered)
+            lost = (delivered if rp.mode == "full"
+                    else np.minimum(delivered, rp.window))
+            total = float(lost.sum())
+            if total <= 0.0:
+                return
+            c_rem[hit] += lost
+            retrans_total += total
+            for o in np.unique(c_mf[hit]).tolist():
+                mf_rem_cache.pop(o, None)
+                invalidate_job(self._mfs[o].job.name)
+            if tr is not None:
+                tr.retransmit(t, total, int(hit.sum()))
+
+        def reroute() -> None:
+            """Deterministically re-hash every (src, dst) pair's route
+            around the current hard-down set; pairs with no surviving
+            candidate keep the nominal (dead) route and stall until
+            repair.  Rewrites the full-table CSR in place, re-derives
+            the compacted incidence, and drops every route-dependent
+            memo (inactive demand vectors, live-link bitmasks)."""
+            topo = self.fabric.topology
+            if not topo.has_alternate_paths:
+                return
+            if self._reroute_state is None:
+                per_pid: list[list[int]] = [[] for _ in self._route_pairs]
+                for i, pid in enumerate(self._pathid.tolist()):
+                    per_pid[pid].append(i)
+                self._reroute_state = (
+                    [topo.path(*pr) for pr in self._route_pairs],
+                    [np.asarray(v, dtype=np.int64) for v in per_pid])
+            cur, flows_of = self._reroute_state
+            down = self.fabric.down_links()
+            changed: list[int] = []
+            for pid, pr in enumerate(self._route_pairs):
+                new = topo.route_avoiding(pr[0], pr[1], down)
+                if new is None:
+                    new = topo.path(*pr)
+                if new != cur[pid]:
+                    cur[pid] = new
+                    changed.append(pid)
+            if not changed:
+                return
+            li = self._li
+            lp = self._lp
+            for pid in changed:
+                idx = flows_of[pid]
+                if idx.size == 0:
+                    continue
+                new_row = np.asarray(cur[pid], dtype=li.dtype)
+                if int(lp[idx[0] + 1] - lp[idx[0]]) != new_row.size:
+                    raise RuntimeError(
+                        f"route_candidates changed path length for pair "
+                        f"{self._route_pairs[pid]}")
+                pos = (lp[idx][:, None]
+                       + np.arange(new_row.size, dtype=np.int64)).ravel()
+                li[pos] = np.tile(new_row, idx.size)
+            rebuild_links()
+            self._dems_cache.clear()
+            for rec in active.values():
+                rec.pm = None
+            if tr is not None:
+                n_act = 0
+                if c_glob.size:
+                    n_act = int(np.isin(
+                        self._pathid[c_glob],
+                        np.asarray(changed, dtype=np.int64)).sum())
+                tr.reroute(t, n_act)
         # First-service bookkeeping for SimResult.mf_service_order.
         unserved: set[int] = set()
         service_order: list[tuple[str, str]] = []
@@ -1083,14 +1326,28 @@ class Simulator:
                 dt = min(dt, task.remaining / self.machine_speed)
             if next_arrival < len(jobs_by_arrival):
                 dt = min(dt, jobs_by_arrival[next_arrival].arrival - t)
-            if next_pert < len(all_perts):
-                dt = min(dt, all_perts[next_pert].time - t)
+            if next_fault < len(all_faults):
+                dt = min(dt, all_faults[next_fault].time - t)
 
             if dt == float("inf"):
                 blocked = [j.name for j in live_jobs]
-                raise RuntimeError(
-                    f"deadlock at t={t}: no progress possible for {blocked}")
+                msg = f"deadlock at t={t}: no progress possible for {blocked}"
+                if down_any:
+                    msg += (f" (hard-down links {sorted(down_ids)} with no "
+                            f"pending repair — fault streams must schedule "
+                            f"repairs)")
+                raise RuntimeError(msg)
             dt = max(dt, 0.0)
+
+            # ---- stall accounting: live flows whose route crosses a
+            # hard-down link receive zero rate for this whole segment.
+            if down_any and dt > 0.0 and c_rem.size:
+                stalled = slots_crossing(down_ids)
+                stalled &= c_rem > EPS
+                ns = int(stalled.sum())
+                if ns:
+                    stall_union += dt
+                    flow_stall += ns * dt
 
             # ---- telemetry: one piecewise-constant rate segment per
             # event-loop advance; together they tile [0, makespan], so
@@ -1126,24 +1383,63 @@ class Simulator:
                     # Compute-dependent scratch (cpath keys) went stale.
                     job_scratch.pop(job.name, None)
 
-            while (next_pert < len(all_perts)
-                   and all_perts[next_pert].time <= t + EPS):
-                p = all_perts[next_pert]
-                next_pert += 1
-                if p.factor is None:
-                    self.fabric.restore(p.port)
+            while (next_fault < len(all_faults)
+                   and all_faults[next_fault].time <= t + EPS):
+                ev = all_faults[next_fault]
+                next_fault += 1
+                kind = ev.kind
+                hard = False
+                if kind == "degrade_port":
+                    self.fabric.degrade(ev.target, ev.factor)
+                    log(f"degrade port {ev.target} x{ev.factor}")
+                elif kind == "restore_port":
+                    self.fabric.restore(ev.target)
+                    log(f"restore port {ev.target}")
+                elif kind == "degrade_link":
+                    self.fabric.degrade_link(ev.target, ev.factor)
+                    log(f"degrade link {ev.target} x{ev.factor}")
+                elif kind == "restore_link":
+                    self.fabric.restore_link(ev.target)
+                    log(f"restore link {ev.target}")
+                elif kind == "fail_link":
+                    self.fabric.fail_link(ev.target)
+                    apply_retransmit((ev.target,))
+                    hard = True
+                elif kind == "fail_host":
+                    host = self.fabric.topology.host_links(ev.target)
+                    self.fabric.fail_host(ev.target)
+                    apply_retransmit(host)
+                    hard = True
+                elif kind == "repair_link":
+                    self.fabric.repair_link(ev.target)
+                    t_last_repair = t
+                    hard = True
+                else:                   # repair_host (ctor checked the kind)
+                    self.fabric.repair_host(ev.target)
+                    t_last_repair = t
+                    hard = True
+                if hard:
+                    n_hard += 1
+                    log(f"{kind} {ev.target}")
+                    # The down set changed: re-hash routes around it and
+                    # drop every route-dependent memo.
+                    reroute()
+                    down_any = bool(self.fabric.down.any())
+                    down_ids = (tuple(sorted(self.fabric.down_links()))
+                                if down_any else ())
                 else:
-                    self.fabric.degrade(p.port, p.factor)
+                    n_soft += 1
                 view.egress = np.asarray(self.fabric.egress, dtype=np.float64)
                 view.ingress = np.asarray(self.fabric.ingress, dtype=np.float64)
                 view.link_cap = self.fabric.cap.copy()
                 job_scratch.clear()     # capacity-dependent keys everywhere
-                sched.on_perturbation(p)
-                mark_dirty("perturbation")
+                sched.on_perturbation(ev)
+                mark_dirty("fault" if hard else "perturbation")
                 if tr is not None:
-                    tr.perturbation(t, p.port, p.factor)
-                log(f"degrade port {p.port} x{p.factor}" if p.factor
-                    is not None else f"restore port {p.port}")
+                    if kind in ("degrade_port", "restore_port"):
+                        tr.perturbation(t, ev.target, ev.factor)
+                    else:
+                        tr.fault(t, kind, ev.target)
 
             # ---- commit flow / metaflow completions (per-group batches)
             if c_rem.size:
@@ -1200,12 +1496,18 @@ class Simulator:
         jct = {j.name: (j.finish_time or 0.0) - j.arrival for j in self.jobs}
         cct = {j.name: last_flow.get(j.name, j.arrival) - j.arrival
                for j in self.jobs}
+        recovery = 0.0 if t_last_repair is None else max(0.0, t - t_last_repair)
         return SimResult(jct=jct, cct=cct, mf_finish=mf_finish,
                          task_finish=task_finish, makespan=t, events=events,
                          timeline=timeline, sched_full=sched_full,
                          sched_refresh=sched_refresh,
                          mf_service_order=service_order,
-                         n_perturbations=next_pert)
+                         n_perturbations=n_soft,
+                         n_faults=n_hard,
+                         retransmitted_bytes=retrans_total,
+                         stall_s=stall_union,
+                         flow_stall_s=flow_stall,
+                         recovery_lag_s=recovery)
 
 def simulate(jobs: list[JobDAG], scheduler, n_ports: int | None = None,
              fabric: Fabric | None = None, topology: Topology | None = None,

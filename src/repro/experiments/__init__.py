@@ -16,6 +16,12 @@ from repro.experiments.aggregate import (
     quantiles,
     t_crit95,
 )
+from repro.experiments.resilience import (
+    RESILIENCE_INTENSITIES,
+    aggregate_resilience,
+    check_resilience,
+    resilience_spec,
+)
 from repro.experiments.runner import (
     load_shard,
     run_cell,
@@ -35,13 +41,17 @@ from repro.experiments.spec import (
 __all__ = [
     "Cell",
     "DEFAULT_TOPOLOGY",
+    "RESILIENCE_INTENSITIES",
     "SweepSpec",
     "aggregate",
+    "aggregate_resilience",
     "check",
+    "check_resilience",
     "fingerprint",
     "load_shard",
     "mean_ci95",
     "quantiles",
+    "resilience_spec",
     "resolve_topology",
     "run_cell",
     "run_sweep",

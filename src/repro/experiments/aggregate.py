@@ -112,6 +112,12 @@ def _flatten(spec: SweepSpec, shard_docs: list[dict]) -> dict:
 
 def aggregate(spec: SweepSpec, shard_docs: list[dict]) -> dict:
     """The full aggregate document (see module docstring)."""
+    if spec.fault_intensities != (0.0,):
+        raise ValueError(
+            "aggregate() keys cells without the fault axis; use "
+            "repro.experiments.resilience.aggregate_resilience for a "
+            "sweep with fault_intensities"
+        )
     got = _flatten(spec, shard_docs)
     seeds = [spec.seed0 + k for k in range(spec.n_seeds)]
     results: dict[str, dict] = {}

@@ -38,6 +38,13 @@ def run_cell(
 ) -> dict:
     """Execute one measurement cell; returns its JSON record.
 
+    A cell with ``fault_intensity > 0`` runs under the chaos fault
+    family (``repro.faults.chaos_spec`` at the cell's workload seed):
+    the compiled fault stream and its retransmission policy are passed
+    to ``simulate`` and the record carries a ``fault_intensity`` key.
+    Fault-free cells take the exact pre-existing path and emit
+    byte-identical records.
+
     ``analyze=True`` additionally computes the LP-free per-job lower
     bounds (``repro.analysis.bounds``), asserts the achieved JCT/CCT
     never beat them, and carries them in the result record — opt-in so
@@ -57,6 +64,16 @@ def run_cell(
         quick=quick,
         topology=cell.topology,
     )
+    faults = None
+    retransmit = None
+    if cell.fault_intensity:
+        # Deferred import: repro.faults builds on repro.core; fault-free
+        # cells (every pre-existing sweep) never touch it.
+        from repro.faults import chaos_spec
+
+        fault_spec = chaos_spec(fabric, jobs, cell.fault_intensity, seed=cell.seed)
+        faults = fault_spec.compile(fabric.topology)
+        retransmit = fault_spec.retransmit
     jct_b = cct_b = None
     if analyze:
         from repro.analysis.bounds import scenario_lower_bounds
@@ -75,6 +92,8 @@ def run_cell(
         fabric=fabric,
         debug_checks=debug_checks,
         tracer=tracer,
+        faults=faults,
+        retransmit=retransmit,
     )
     wall = time.perf_counter() - t0
     if len(res.jct) != len(jobs):
@@ -98,7 +117,7 @@ def run_cell(
         out_dir.mkdir(parents=True, exist_ok=True)
         stem = f"{cell.scenario}_{cell.policy}_{cell.topology}_seed{cell.seed}"
         write_chrome_trace(tracer, out_dir / f"{stem}.trace.json")
-    return {
+    rec = {
         "scenario": cell.scenario,
         "policy": cell.policy,
         "topology": cell.topology,
@@ -111,6 +130,11 @@ def run_cell(
             trace_counters=counters,
         ).to_json(),
     }
+    # Key present only on chaos cells, so fault-free records (and every
+    # pinned artifact built from them) are byte-identical to before.
+    if cell.fault_intensity:
+        rec["fault_intensity"] = cell.fault_intensity
+    return rec
 
 
 def scenario_rows(

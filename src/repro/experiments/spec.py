@@ -80,6 +80,8 @@ class Cell:
     policy: str
     topology: str
     seed: int
+    #: Chaos fault intensity (``repro.faults.chaos_spec``); 0 = fault-free.
+    fault_intensity: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -98,6 +100,10 @@ class SweepSpec:
     #: (scenario, policy, baseline) of the headline ratio — the paper's
     #: metaflow-vs-coflow claim is MSA vs varys/SEBF on the mixed cluster.
     headline: tuple[str, str, str] = ("mixed", "msa", "varys")
+    #: Chaos fault-intensity axis (``repro.faults.chaos_spec``).  The
+    #: default ``(0.0,)`` is the fault-free sweep and serializes to
+    #: nothing, so the spec hash of every existing sweep is unchanged.
+    fault_intensities: tuple[float, ...] = (0.0,)
 
     def __post_init__(self):
         known_scen = sorted(SCENARIOS)
@@ -128,10 +134,19 @@ class SweepSpec:
         if not self.scenarios or not self.policies or not self.topologies:
             msg = "scenarios, policies and topologies must all be non-empty"
             raise ValueError(msg)
+        if not self.fault_intensities:
+            raise ValueError("fault_intensities must be non-empty")
+        for x in self.fault_intensities:
+            if not (x >= 0 and x == x and x != float("inf")):
+                msg = f"fault intensity must be finite and >= 0, got {x!r}"
+                raise ValueError(msg)
+        if len(set(self.fault_intensities)) != len(self.fault_intensities):
+            msg = f"duplicate fault intensities {list(self.fault_intensities)}"
+            raise ValueError(msg)
 
     # ---------------------------------------------------- serialization
     def to_json(self) -> dict:
-        return {
+        doc = {
             "scenarios": list(self.scenarios),
             "policies": list(self.policies),
             "topologies": list(self.topologies),
@@ -142,6 +157,11 @@ class SweepSpec:
             "baseline": self.baseline,
             "headline": list(self.headline),
         }
+        # Omitted at the fault-free default so the spec hash (and every
+        # existing shard/aggregate artifact keyed by it) is unchanged.
+        if self.fault_intensities != (0.0,):
+            doc["fault_intensities"] = list(self.fault_intensities)
+        return doc
 
     @classmethod
     def from_json(cls, doc: dict) -> "SweepSpec":
@@ -155,6 +175,7 @@ class SweepSpec:
             cells_per_shard=doc["cells_per_shard"],
             baseline=doc["baseline"],
             headline=tuple(doc["headline"]),
+            fault_intensities=tuple(doc.get("fault_intensities", (0.0,))),
         )
 
     def spec_hash(self) -> str:
@@ -166,16 +187,18 @@ class SweepSpec:
     # ----------------------------------------------------- compilation
     def cells(self) -> list[Cell]:
         """The flat cell list, in deterministic order: scenario, then
-        topology, then seed, then policy — all policies of one workload
-        are adjacent (paired-comparison locality within a shard)."""
+        topology, then fault intensity, then seed, then policy — all
+        policies of one workload are adjacent (paired-comparison
+        locality within a shard)."""
         out = []
         for scen in self.scenarios:
             for topo in self.topologies:
                 concrete = resolve_topology(scen, topo)
-                for k in range(self.n_seeds):
-                    seed = self.seed0 + k
-                    for pol in self.policies:
-                        out.append(Cell(scen, pol, concrete, seed))
+                for inten in self.fault_intensities:
+                    for k in range(self.n_seeds):
+                        seed = self.seed0 + k
+                        for pol in self.policies:
+                            out.append(Cell(scen, pol, concrete, seed, inten))
         return out
 
     def shards(self) -> list[list[Cell]]:

@@ -1,0 +1,44 @@
+"""repro.faults — seeded, declarative fault injection (DESIGN.md §15).
+
+The :class:`FaultSpec` DSL compiles scheduled hard failures
+(:class:`LinkFailure`/:class:`HostFailure`) and seeded renewal processes
+(:class:`FlakyLinks` degrade storms, :class:`StragglerBurst`) into the
+deterministic :class:`~repro.core.simulator.FaultEvent` stream the
+simulator executes, strict-linted by ``repro.analysis.lint.lint_faults``.
+:func:`chaos_spec` is the intensity-scaled scenario family behind the
+resilience sweep (``benchmarks/resilience.py`` / ``BENCH_resilience.json``).
+
+Quickstart::
+
+    from repro.core import simulate
+    from repro.faults import chaos_spec
+
+    spec = chaos_spec(fabric, jobs, intensity=1.0, seed=0)
+    res = simulate(jobs, scheduler, fabric=fabric,
+                   faults=spec.compile(fabric.topology),
+                   retransmit=spec.retransmit)
+"""
+
+from repro.faults.spec import (
+    FAULT_STREAM,
+    FaultSpec,
+    FlakyLinks,
+    HostFailure,
+    LinkFailure,
+    StragglerBurst,
+    chaos_spec,
+    mean_flow_size,
+    workload_horizon,
+)
+
+__all__ = [
+    "FAULT_STREAM",
+    "FaultSpec",
+    "FlakyLinks",
+    "HostFailure",
+    "LinkFailure",
+    "StragglerBurst",
+    "chaos_spec",
+    "mean_flow_size",
+    "workload_horizon",
+]

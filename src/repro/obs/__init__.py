@@ -28,12 +28,15 @@ from repro.obs.export import (
 )
 from repro.obs.trace import (
     AuditEvent,
+    FabricFaultEvent,
     FlowFinishEvent,
     JobEvent,
     MemoryTracer,
     MfEvent,
     NodeEvent,
     PerturbEvent,
+    RerouteEvent,
+    RetransmitEvent,
     SchedEvent,
     SegmentEvent,
     Tracer,
@@ -41,7 +44,9 @@ from repro.obs.trace import (
 from repro.obs.views import (
     LinkUsage,
     audit_link_seconds,
+    downtime_windows,
     job_phases,
+    link_downtime,
     link_timeline,
     link_utilization,
     scheduler_counters,
@@ -49,6 +54,7 @@ from repro.obs.views import (
 
 __all__ = [
     "AuditEvent",
+    "FabricFaultEvent",
     "FlowFinishEvent",
     "JobEvent",
     "LinkUsage",
@@ -56,13 +62,17 @@ __all__ = [
     "MfEvent",
     "NodeEvent",
     "PerturbEvent",
+    "RerouteEvent",
+    "RetransmitEvent",
     "SchedEvent",
     "SegmentEvent",
     "Tracer",
     "audit_link_seconds",
     "chrome_trace",
+    "downtime_windows",
     "job_phases",
     "jsonl_events",
+    "link_downtime",
     "link_timeline",
     "link_utilization",
     "scheduler_counters",

@@ -31,15 +31,19 @@ import numpy as np
 from repro.core.metaflow import EPS
 from repro.obs.trace import (
     AuditEvent,
+    FabricFaultEvent,
     FlowFinishEvent,
     JobEvent,
     MemoryTracer,
     MfEvent,
     NodeEvent,
     PerturbEvent,
+    RerouteEvent,
+    RetransmitEvent,
     SchedEvent,
     SegmentEvent,
 )
+from repro.obs.views import downtime_windows
 
 _US = 1e6  # trace_event timestamps are microseconds
 
@@ -185,6 +189,58 @@ def chrome_trace(trace: MemoryTracer) -> dict:
                     "name": name,
                 }
             )
+        elif kind is FabricFaultEvent:
+            events.append(
+                {
+                    "ph": "i",
+                    "s": "g",
+                    "pid": 1,
+                    "tid": 0,
+                    "ts": ev.t * _US,
+                    "name": f"{ev.kind}[{ev.target}]",
+                    "cat": "fault",
+                }
+            )
+        elif kind is RerouteEvent:
+            events.append(
+                {
+                    "ph": "i",
+                    "s": "g",
+                    "pid": 1,
+                    "tid": 0,
+                    "ts": ev.t * _US,
+                    "name": f"reroute({ev.n_flows} flows)",
+                    "cat": "fault",
+                }
+            )
+        elif kind is RetransmitEvent:
+            events.append(
+                {
+                    "ph": "i",
+                    "s": "g",
+                    "pid": 1,
+                    "tid": 0,
+                    "ts": ev.t * _US,
+                    "name": f"retransmit {ev.bytes:g}B",
+                    "cat": "fault",
+                    "args": {"bytes": ev.bytes, "n_flows": ev.n_flows},
+                }
+            )
+
+    # --- hard-down windows (pid 1): one complete slice per failure ------
+    for link, windows in downtime_windows(trace).items():
+        for t0, t1 in windows:
+            events.append(
+                {
+                    "ph": "X",
+                    "pid": 1,
+                    "tid": 0,
+                    "ts": t0 * _US,
+                    "dur": (t1 - t0) * _US,
+                    "name": f"down:{_link_name(trace, link)}",
+                    "cat": "fault",
+                }
+            )
 
     events.sort(key=lambda e: e["ts"])
     return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
@@ -271,6 +327,22 @@ def jsonl_events(trace: MemoryTracer):
                 "t": ev.t,
                 "port": ev.port,
                 "factor": ev.factor,
+            }
+        elif kind is FabricFaultEvent:
+            yield {
+                "ev": "fault",
+                "t": ev.t,
+                "kind": ev.kind,
+                "target": ev.target,
+            }
+        elif kind is RerouteEvent:
+            yield {"ev": "reroute", "t": ev.t, "n_flows": ev.n_flows}
+        elif kind is RetransmitEvent:
+            yield {
+                "ev": "retransmit",
+                "t": ev.t,
+                "bytes": ev.bytes,
+                "n_flows": ev.n_flows,
             }
 
 

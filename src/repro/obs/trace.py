@@ -38,6 +38,13 @@ Event taxonomy (all times are simulation time):
   (``repro.analysis.sanitize``) and its finding count.
 * ``PerturbEvent``   — an applied fabric perturbation (``factor=None``
   is a restore); previously invisible in any output.
+* ``FaultEvent``     — an applied hard/soft fabric fault beyond port
+  perturbations: ``fail_link`` / ``repair_link`` / ``fail_host`` /
+  ``repair_host`` / ``degrade_link`` / ``restore_link``.
+* ``RerouteEvent``   — a fault-time re-hash of routes around the
+  hard-down set (count of active flows whose route changed).
+* ``RetransmitEvent``— in-flight bytes re-added by the retransmission
+  policy when a link hard-failed.
 * ``SegmentEvent``   — one piecewise-constant rate segment
   ``[t0, t1)``: the dense per-link load vector plus per-active-metaflow
   rate sums.  Segments tile the run exactly (the fluid model holds
@@ -110,6 +117,29 @@ class PerturbEvent:
 
 
 @dataclass(slots=True)
+class FabricFaultEvent:
+    """A fault event other than a port perturbation (see module doc).
+    ``target`` is a link id for ``*_link`` kinds, a port for ``*_host``."""
+
+    t: float
+    kind: str  # fail_link|repair_link|fail_host|repair_host|degrade_link|restore_link
+    target: int
+
+
+@dataclass(slots=True)
+class RerouteEvent:
+    t: float
+    n_flows: int  # active flows whose route changed
+
+
+@dataclass(slots=True)
+class RetransmitEvent:
+    t: float
+    bytes: float  # total in-flight bytes re-added
+    n_flows: int  # flows that lost bytes
+
+
+@dataclass(slots=True)
 class SegmentEvent:
     t0: float
     t1: float
@@ -162,6 +192,15 @@ class Tracer:
         pass
 
     def perturbation(self, t: float, port: int, factor: float | None) -> None:
+        pass
+
+    def fault(self, t: float, kind: str, target: int) -> None:
+        pass
+
+    def reroute(self, t: float, n_flows: int) -> None:
+        pass
+
+    def retransmit(self, t: float, total_bytes: float, n_flows: int) -> None:
         pass
 
     def segment(
@@ -236,6 +275,15 @@ class MemoryTracer(Tracer):
 
     def perturbation(self, t: float, port: int, factor: float | None) -> None:
         self.events.append(PerturbEvent(t, port, factor))
+
+    def fault(self, t: float, kind: str, target: int) -> None:
+        self.events.append(FabricFaultEvent(t, kind, target))
+
+    def reroute(self, t: float, n_flows: int) -> None:
+        self.events.append(RerouteEvent(t, n_flows))
+
+    def retransmit(self, t: float, total_bytes: float, n_flows: int) -> None:
+        self.events.append(RetransmitEvent(t, total_bytes, n_flows))
 
     def segment(
         self,

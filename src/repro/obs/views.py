@@ -24,12 +24,15 @@ import numpy as np
 from repro.core.metaflow import EPS
 from repro.obs.trace import (
     AuditEvent,
+    FabricFaultEvent,
     FlowFinishEvent,
     JobEvent,
     MemoryTracer,
     MfEvent,
     NodeEvent,
     PerturbEvent,
+    RerouteEvent,
+    RetransmitEvent,
     SchedEvent,
     SegmentEvent,
 )
@@ -152,6 +155,50 @@ def link_timeline(trace: MemoryTracer, link: int) -> list[tuple[float, float, fl
 
 
 # --------------------------------------------------------------------------
+# per-link downtime (hard failures)
+# --------------------------------------------------------------------------
+
+
+def downtime_windows(trace: MemoryTracer) -> dict[int, list[tuple[float, float]]]:
+    """Per-link hard-down windows ``[fail_t, repair_t)`` from the fault
+    events.  Host fail/repair events expand to the port's up/down link
+    pair (the same links ``Fabric.fail_host`` zeroes); windows still
+    open at the end of the trace close at the makespan."""
+    open_at: dict[int, float] = {}
+    out: dict[int, list[tuple[float, float]]] = defaultdict(list)
+    for ev in trace.events:
+        if type(ev) is not FabricFaultEvent:
+            continue
+        if ev.kind in ("fail_link", "repair_link"):
+            links = (ev.target,)
+        elif ev.kind in ("fail_host", "repair_host"):
+            links = (ev.target, trace.n_ports + ev.target)
+        else:
+            continue
+        if ev.kind.startswith("fail"):
+            for link in links:
+                open_at[link] = ev.t
+        else:
+            for link in links:
+                t0 = open_at.pop(link, None)
+                if t0 is not None:
+                    out[link].append((t0, ev.t))
+    if open_at:
+        t_end = trace.makespan
+        if t_end is None:
+            t_end = max(open_at.values())
+        for link, t0 in open_at.items():
+            if t_end > t0:
+                out[link].append((t0, t_end))
+    return {link: _merge(ivs) for link, ivs in sorted(out.items())}
+
+
+def link_downtime(trace: MemoryTracer) -> dict[int, float]:
+    """Per-link total hard-down seconds (measure of the windows)."""
+    return {link: _measure(ivs) for link, ivs in downtime_windows(trace).items()}
+
+
+# --------------------------------------------------------------------------
 # per-job phase decomposition (paper Fig. 1)
 # --------------------------------------------------------------------------
 
@@ -246,6 +293,8 @@ def scheduler_counters(trace: MemoryTracer) -> dict:
     wall_full = wall_refresh = 0.0
     reasons: dict[str, int] = {}
     n_pert = n_flow_ev = n_segments = audits = findings = 0
+    n_fault = n_reroute = n_retrans = 0
+    retrans_bytes = 0.0
     for ev in trace.events:
         kind = type(ev)
         if kind is SegmentEvent:
@@ -262,6 +311,13 @@ def scheduler_counters(trace: MemoryTracer) -> dict:
             n_flow_ev += 1
         elif kind is PerturbEvent:
             n_pert += 1
+        elif kind is FabricFaultEvent:
+            n_fault += 1
+        elif kind is RerouteEvent:
+            n_reroute += 1
+        elif kind is RetransmitEvent:
+            n_retrans += 1
+            retrans_bytes += ev.bytes
         elif kind is AuditEvent:
             audits += 1
             findings += ev.findings
@@ -277,6 +333,10 @@ def scheduler_counters(trace: MemoryTracer) -> dict:
         "n_segments": n_segments,
         "n_flow_finish_events": n_flow_ev,
         "n_perturbations": n_pert,
+        "n_fault_events": n_fault,
+        "n_reroutes": n_reroute,
+        "n_retransmit_events": n_retrans,
+        "retransmitted_bytes": retrans_bytes,
         "sanitizer_audits": audits,
         "sanitizer_findings": findings,
         "n_trace_events": len(trace.events),

@@ -172,3 +172,86 @@ class TestResidualLinks:
         assert rates == {}                       # nothing granted
         assert r.cap == snapshot                 # bit-stable, no drift
         assert min(r.cap) >= 0.0
+
+
+class TestHardDown:
+    """Hard link/host failure state: documented raise/no-op contracts
+    for every edge case (double-degrade, restore of never-degraded,
+    soft events during a hard-down window)."""
+
+    def test_fail_repair_link_roundtrip(self):
+        fab = Fabric(n_ports=2, egress=[2.0, 4.0], ingress=[1.0, 3.0])
+        fab.fail_link(0)
+        assert fab.cap[0] == 0.0 and fab.down_links() == {0}
+        fab.repair_link(0)
+        assert fab.cap[0] == 2.0 and fab.down_links() == frozenset()
+
+    def test_double_fail_and_spurious_repair_raise(self):
+        fab = Fabric(n_ports=2)
+        fab.fail_link(0)
+        with pytest.raises(ValueError, match="already down"):
+            fab.fail_link(0)
+        with pytest.raises(ValueError, match="is not down"):
+            fab.repair_link(1)
+
+    def test_repair_discards_pre_failure_degradation(self):
+        """A repair replaces the hardware: capacity returns to nominal
+        even if the link was degraded when it failed."""
+        fab = Fabric(n_ports=2)
+        fab.degrade_link(0, 0.5)
+        fab.fail_link(0)
+        fab.repair_link(0)
+        assert fab.cap[0] == 1.0
+
+    def test_double_degrade_compounds_restore_is_idempotent(self):
+        fab = Fabric(n_ports=2)
+        fab.degrade_link(0, 0.5)
+        fab.degrade_link(0, 0.5)              # compounds multiplicatively
+        assert fab.cap[0] == 0.25
+        fab.restore_link(0)
+        assert fab.cap[0] == 1.0
+        fab.restore_link(1)                    # never degraded: no-op
+        assert fab.cap[1] == 1.0
+
+    def test_soft_events_on_hard_down_target_raise(self):
+        fab = Fabric(n_ports=2)
+        fab.fail_link(0)
+        with pytest.raises(ValueError, match="hard-down"):
+            fab.degrade_link(0, 0.5)
+        with pytest.raises(ValueError, match="hard-down"):
+            fab.restore_link(0)
+        with pytest.raises(ValueError, match="hard-down"):
+            fab.degrade(0, 0.5)                # port 0's up link is link 0
+        with pytest.raises(ValueError, match="hard-down"):
+            fab.restore(0)
+
+    def test_global_restore_skips_down_links(self):
+        fab = Fabric(n_ports=2)
+        fab.degrade(1, 0.5)
+        fab.fail_link(0)
+        fab.restore()                          # resets degraded, not failed
+        assert fab.cap[0] == 0.0 and fab.down[0]
+        assert fab.cap[1] == 1.0 and fab.cap[3] == 1.0
+
+    def test_fail_repair_host_pairs_both_links(self):
+        fab = Fabric(n_ports=3)
+        fab.fail_host(1)
+        assert fab.down_links() == {1, 4}      # up(1)=1, down(1)=n_ports+1
+        with pytest.raises(ValueError, match="already down"):
+            fab.fail_host(1)
+        fab.repair_host(1)
+        assert fab.down_links() == frozenset()
+
+    def test_repair_host_rejects_mixed_state(self):
+        """Host repair must pair with host failure — it never absorbs an
+        unrelated single-link failure."""
+        fab = Fabric(n_ports=3)
+        fab.fail_link(1)
+        with pytest.raises(ValueError, match="is not down"):
+            fab.repair_host(1)
+
+    def test_fail_host_rejects_partial_overlap(self):
+        fab = Fabric(n_ports=3)
+        fab.fail_link(1)
+        with pytest.raises(ValueError, match="already down"):
+            fab.fail_host(1)

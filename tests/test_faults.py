@@ -1,0 +1,481 @@
+"""Fault-injection subsystem: hard failures, rerouting, retransmission,
+the FaultSpec DSL, fault-stream linting, resilience sweep plumbing, and
+the obs-layer fault views.
+
+The exact-arithmetic cases pin the failure semantics on a 2-port big
+switch (unit caps, one 4-byte flow, a [1, 3) failure window on the
+flow's egress link): the flow stalls for the 2-second window, loses
+min(delivered, window) bytes to retransmission, and finishes at
+6.0 / 6.5 / 7.0 under retransmit none / window(0.5) / full.
+"""
+
+import json
+import random
+
+import pytest
+
+from repro.analysis import RecordingScheduler, lint_faults
+from repro.analysis.lint import LintError
+from repro.core import (FaultEvent, JobDAG, Perturbation, RetransmitPolicy,
+                        Fabric, fault_key, leaf_spine, make_scheduler,
+                        simulate)
+from repro.experiments import (SweepSpec, aggregate_resilience,
+                               check_resilience, resilience_spec, run_cell,
+                               run_sweep)
+from repro.experiments.spec import Cell
+from repro.faults import (FAULT_STREAM, FaultSpec, FlakyLinks, HostFailure,
+                          LinkFailure, StragglerBurst, chaos_spec,
+                          workload_horizon)
+from repro.obs import (MemoryTracer, RerouteEvent, chrome_trace,
+                       downtime_windows, jsonl_events, link_downtime,
+                       scheduler_counters)
+
+
+def one_flow_job(size: float = 4.0) -> list[JobDAG]:
+    j = JobDAG("j0")
+    j.add_metaflow("m", [(0, 1, size)])
+    return [j]
+
+
+def window_events(link: int = 0, at: float = 1.0, until: float = 3.0):
+    return [FaultEvent(at, "fail_link", link),
+            FaultEvent(until, "repair_link", link)]
+
+
+# ------------------------------------------------------------ semantics
+class TestFailureSemantics:
+    """Exact arithmetic on the 2-port big switch (see module doc)."""
+
+    def run(self, retransmit=None, faults=None):
+        fab = Fabric(n_ports=2)
+        return simulate(one_flow_job(), make_scheduler("msa"), fabric=fab,
+                        faults=window_events() if faults is None else faults,
+                        retransmit=retransmit)
+
+    def test_stall_without_retransmission(self):
+        res = self.run()
+        assert res.makespan == pytest.approx(6.0)
+        assert res.stall_s == pytest.approx(2.0)
+        assert res.flow_stall_s == pytest.approx(2.0)
+        assert res.retransmitted_bytes == 0.0
+        assert res.n_faults == 2 and res.n_perturbations == 0
+        assert res.recovery_lag_s == pytest.approx(3.0)
+
+    def test_windowed_retransmission(self):
+        res = self.run(RetransmitPolicy("window", window=0.5))
+        assert res.makespan == pytest.approx(6.5)
+        assert res.retransmitted_bytes == pytest.approx(0.5)
+
+    def test_full_retransmission(self):
+        """Full mode re-adds every delivered byte: 1 byte was in flight
+        when the link died, so the flow effectively restarts."""
+        res = self.run(RetransmitPolicy("full"))
+        assert res.makespan == pytest.approx(7.0)
+        assert res.retransmitted_bytes == pytest.approx(1.0)
+
+    def test_window_never_exceeds_delivered(self):
+        """A window larger than the delivered bytes loses only what was
+        actually delivered (no negative progress)."""
+        res = self.run(RetransmitPolicy("window", window=100.0))
+        assert res.retransmitted_bytes == pytest.approx(1.0)
+        assert res.makespan == pytest.approx(7.0)
+
+    def test_fault_free_run_reports_zero_everything(self):
+        fab = Fabric(n_ports=2)
+        res = simulate(one_flow_job(), make_scheduler("msa"), fabric=fab)
+        assert res.makespan == pytest.approx(4.0)
+        assert res.n_faults == 0 and res.stall_s == 0.0
+        assert res.retransmitted_bytes == 0.0
+        assert res.recovery_lag_s == 0.0
+
+    def test_empty_fault_list_is_bit_identical_to_none(self):
+        fab1 = Fabric(n_ports=2)
+        a = simulate(one_flow_job(), make_scheduler("msa"), fabric=fab1)
+        fab2 = Fabric(n_ports=2)
+        b = simulate(one_flow_job(), make_scheduler("msa"), fabric=fab2,
+                     faults=[], retransmit=RetransmitPolicy("none"))
+        assert a.jct == b.jct and a.makespan == b.makespan
+        assert a.events == b.events
+
+    def test_retransmit_policy_validation(self):
+        with pytest.raises(ValueError):
+            RetransmitPolicy("bogus")
+        with pytest.raises(ValueError):
+            RetransmitPolicy("window", window=0.0)
+
+    def test_bad_fault_events_rejected_at_construction(self):
+        fab = Fabric(n_ports=2)
+        for ev in (FaultEvent(-1.0, "fail_link", 0),
+                   FaultEvent(0.0, "fail_link", 99),
+                   FaultEvent(0.0, "nonsense", 0),
+                   FaultEvent(0.0, "fail_link", 0, factor=0.5),
+                   FaultEvent(0.0, "degrade_link", 0)):
+            with pytest.raises((ValueError, KeyError)):
+                simulate(one_flow_job(), make_scheduler("msa"),
+                         fabric=fab, faults=[ev])
+
+
+class TestDeterministicTieBreak:
+    """Same-timestamp events apply in one documented order
+    (capacity-raising before capacity-lowering), independent of input
+    order — bit-reproducible across runs."""
+
+    def test_fault_key_orders_repairs_before_failures(self):
+        evs = [FaultEvent(1.0, "fail_link", 0),
+               FaultEvent(1.0, "repair_link", 1),
+               FaultEvent(1.0, "restore_port", 0),
+               FaultEvent(1.0, "degrade_port", 0, 0.5)]
+        kinds = [e.kind for e in sorted(evs, key=fault_key)]
+        assert kinds == ["repair_link", "restore_port", "degrade_port",
+                         "fail_link"]
+
+    def test_scrambled_input_order_is_bit_identical(self):
+        """Any permutation of the event list gives the bit-identical
+        SimResult — including same-instant collisions."""
+        events = (window_events(0, 1.0, 3.0)
+                  + [FaultEvent(1.0, "degrade_port", 1, 0.5),
+                     FaultEvent(3.0, "restore_port", 1)])
+        results = []
+        for seed in range(4):
+            shuffled = list(events)
+            random.Random(seed).shuffle(shuffled)
+            fab = Fabric(n_ports=2)
+            res = simulate(one_flow_job(), make_scheduler("msa"),
+                           fabric=fab, faults=shuffled,
+                           retransmit=RetransmitPolicy("window", 0.5))
+            results.append((res.makespan, tuple(sorted(res.jct.items())),
+                            res.retransmitted_bytes, res.stall_s,
+                            res.events))
+        assert len(set(results)) == 1
+
+    def test_perturbations_and_faults_merge_into_one_stream(self):
+        """Legacy Perturbation objects ride the same tie-broken stream
+        as FaultEvents and are counted separately."""
+        fab = Fabric(n_ports=2)
+        res = simulate(one_flow_job(), make_scheduler("msa"), fabric=fab,
+                       perturbations=[Perturbation(0.5, 1, 0.5),
+                                      Perturbation(0.75, 1, None)],
+                       faults=window_events())
+        assert res.n_perturbations == 2 and res.n_faults == 2
+
+
+class TestReroute:
+    """Hard failures on a path-diverse fabric re-hash affected flows
+    onto surviving equal-length paths; repair restores nominal routes."""
+
+    def test_leaf_spine_reroutes_around_dead_spine_link(self):
+        topo = leaf_spine(n_leaves=2, hosts_per_leaf=2, n_spines=2)
+        # Cross-leaf flow 0->2; its nominal route uses one of two spines.
+        j = JobDAG("j0")
+        j.add_metaflow("m", [(0, 2, 4.0)])
+        fab = Fabric(topology=topo)
+        nominal = topo.path(0, 2)
+        spine_up = nominal[1]               # the leaf->spine hop it uses
+        tr = MemoryTracer()
+        res = simulate([j], make_scheduler("msa"), fabric=fab,
+                       faults=window_events(spine_up, 1.0, 3.0), tracer=tr)
+        # The surviving spine carries the flow at full rate: no stall,
+        # no JCT hit relative to the fault-free 4.0.
+        assert res.makespan == pytest.approx(4.0)
+        assert res.stall_s == 0.0
+        reroutes = tr.of(RerouteEvent)
+        assert len(reroutes) == 2            # around failure, back at repair
+        assert reroutes[0].n_flows == 1
+        # The dead link carries zero load while down.
+        for seg in tr.segments():
+            if seg.t0 >= 1.0 and seg.t1 <= 3.0:
+                assert seg.link_load[spine_up] == 0.0
+
+    def test_flow_with_no_surviving_path_stalls_until_repair(self):
+        """Host links have no alternate: the flow stalls for the window
+        instead of deadlocking, then finishes."""
+        topo = leaf_spine(n_leaves=2, hosts_per_leaf=2, n_spines=2)
+        j = JobDAG("j0")
+        j.add_metaflow("m", [(0, 2, 4.0)])
+        fab = Fabric(topology=topo)
+        res = simulate([j], make_scheduler("msa"), fabric=fab,
+                       faults=window_events(0, 1.0, 3.0))   # up(0): no alt
+        assert res.makespan == pytest.approx(6.0)
+        assert res.stall_s == pytest.approx(2.0)
+
+
+# ------------------------------------------------------------ conservation
+def delivered_bytes(tr: MemoryTracer) -> float:
+    return sum(float(seg.mf_rates.sum()) * (seg.t1 - seg.t0)
+               for seg in tr.segments())
+
+
+class TestConservation:
+    """Delivered bytes == offered bytes + retransmitted bytes, exactly
+    (the fluid model loses nothing else)."""
+
+    def test_single_flow_cases(self):
+        for rp in (None, RetransmitPolicy("window", 0.5),
+                   RetransmitPolicy("full")):
+            fab = Fabric(n_ports=2)
+            tr = MemoryTracer()
+            res = simulate(one_flow_job(), make_scheduler("msa"),
+                           fabric=fab, faults=window_events(),
+                           retransmit=rp, tracer=tr)
+            assert delivered_bytes(tr) == pytest.approx(
+                4.0 + res.retransmitted_bytes, abs=1e-9)
+
+    @pytest.mark.parametrize("policy", ["msa", "varys", "fair"])
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_chaos_scenarios_conserve_bytes(self, policy, seed):
+        from repro.appdag.mixer import build_scenario
+        fabric, jobs = build_scenario("mixed", seed=seed, quick=True)
+        offered = sum(j.total_size() for j in jobs)
+        spec = chaos_spec(fabric, jobs, 1.5, seed=seed)
+        tr = MemoryTracer()
+        res = simulate(jobs, make_scheduler(policy), fabric=fabric,
+                       faults=spec.compile(fabric.topology),
+                       retransmit=spec.retransmit, tracer=tr)
+        expect = offered + res.retransmitted_bytes
+        assert delivered_bytes(tr) == pytest.approx(expect, rel=1e-9)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - env without hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:           # pragma: no cover - env without hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(size=st.floats(0.5, 16.0),
+           at=st.floats(0.1, 2.0),
+           dur=st.floats(0.1, 4.0),
+           window=st.floats(0.1, 8.0))
+    def test_conservation_property(size, at, dur, window):
+        fab = Fabric(n_ports=2)
+        tr = MemoryTracer()
+        res = simulate(one_flow_job(size), make_scheduler("msa"),
+                       fabric=fab, faults=window_events(0, at, at + dur),
+                       retransmit=RetransmitPolicy("window", window),
+                       tracer=tr)
+        assert delivered_bytes(tr) == pytest.approx(
+            size + res.retransmitted_bytes, rel=1e-9)
+
+
+# ------------------------------------------------------------------- DSL
+class TestFaultSpec:
+    def test_compile_is_bit_reproducible(self):
+        spec = FaultSpec(
+            horizon=100.0, seed=7,
+            failures=(LinkFailure(0, 10.0, 20.0),
+                      HostFailure(1, 30.0, 40.0)),
+            processes=(FlakyLinks((2, 3), storm_rate=0.1,
+                                  mean_duration=2.0, hit_fraction=0.5),
+                       StragglerBurst((0,), burst_rate=0.05,
+                                      mean_duration=3.0)))
+        a = spec.compile(lint=False)
+        b = spec.compile(lint=False)
+        assert a == b and a == sorted(a, key=fault_key)
+        assert any(e.kind == "degrade_link" for e in a)
+        assert any(e.kind == "fail_host" for e in a)
+
+    def test_process_streams_are_independent(self):
+        """Adding a process never re-rolls the draws of earlier ones
+        (named per-process seed streams)."""
+        flaky = FlakyLinks((2, 3), storm_rate=0.1, mean_duration=2.0)
+        one = FaultSpec(horizon=50.0, seed=3, processes=(flaky,))
+        two = FaultSpec(horizon=50.0, seed=3,
+                        processes=(flaky, StragglerBurst((0,), 0.05, 3.0)))
+        first = [e for e in one.compile(lint=False)]
+        both = two.compile(lint=False)
+        assert all(e in both for e in first)
+
+    def test_compile_strict_lint_rejects_bad_streams(self):
+        spec = FaultSpec(horizon=10.0,
+                         failures=(LinkFailure(0, 5.0, 5.0),))  # zero-width
+        with pytest.raises(LintError):
+            spec.compile()
+        assert spec.compile(lint=False)      # collection still works
+
+    def test_chaos_zero_intensity_is_empty(self):
+        from repro.appdag.mixer import build_scenario
+        fabric, jobs = build_scenario("mixed", seed=0, quick=True)
+        spec = chaos_spec(fabric, jobs, 0.0)
+        assert spec.compile(fabric.topology) == []
+        assert spec.retransmit is None
+        assert spec.horizon == workload_horizon(jobs, fabric)
+        with pytest.raises(ValueError):
+            chaos_spec(fabric, jobs, -1.0)
+
+    def test_chaos_streams_lint_clean_and_scale(self):
+        from repro.appdag.mixer import build_scenario
+        fabric, jobs = build_scenario("mixed", seed=0, quick=True)
+        counts = []
+        for inten in (0.5, 1.0, 2.0, 4.0):
+            spec = chaos_spec(fabric, jobs, inten, seed=0)
+            events = spec.compile(fabric.topology)   # strict lint inside
+            assert events == chaos_spec(fabric, jobs, inten,
+                                        seed=0).compile(fabric.topology)
+            counts.append(len(events))
+        assert counts == sorted(counts) and counts[-1] > counts[0]
+
+    def test_fault_stream_offset_is_pinned(self):
+        # Frozen: changing it re-rolls every committed chaos artifact.
+        assert FAULT_STREAM == 211
+
+
+# ------------------------------------------------------------------ lint
+class TestLintFaults:
+    def test_clean_stream_has_no_findings(self):
+        fab = Fabric(n_ports=2)
+        assert lint_faults(window_events(), fab.topology) == []
+
+    def test_violations(self):
+        fab = Fabric(n_ports=2)
+
+        def errs(events):
+            return [f for f in lint_faults(events, fab.topology)
+                    if f.severity == "error"]
+
+        # negative time / bad factor / factor on a hard kind / range
+        assert errs([FaultEvent(-1.0, "fail_link", 0)])
+        assert errs([FaultEvent(0.0, "degrade_link", 0, -0.5)])
+        assert errs([FaultEvent(0.0, "fail_link", 0, factor=0.5)])
+        assert errs([FaultEvent(0.0, "fail_link", 99)])
+        assert errs([FaultEvent(0.0, "degrade_port", 7, 0.5)])
+        # repair before fail; double fail; unrepaired at end
+        assert errs([FaultEvent(1.0, "repair_link", 0)])
+        assert errs(window_events() + window_events(0, 1.5, 2.5))
+        assert errs([FaultEvent(1.0, "fail_link", 0)])
+        # zero-width window: tie-break applies repair first
+        assert errs(window_events(0, 2.0, 2.0))
+        # soft event inside a hard-down window
+        assert errs(window_events()
+                    + [FaultEvent(2.0, "degrade_link", 0, 0.5)])
+        assert errs(window_events()
+                    + [FaultEvent(2.0, "degrade_port", 0, 0.5)])
+        # host/link interplay
+        assert errs([FaultEvent(1.0, "fail_link", 0),
+                     FaultEvent(2.0, "fail_host", 0),
+                     FaultEvent(3.0, "repair_link", 0)])
+
+    def test_disorder_is_a_warning_not_an_error(self):
+        fab = Fabric(n_ports=2)
+        fs = lint_faults(list(reversed(window_events())), fab.topology)
+        assert [f.severity for f in fs] == ["warning"]
+
+    def test_degrade_factor_above_one_warns(self):
+        fab = Fabric(n_ports=2)
+        fs = lint_faults([FaultEvent(0.0, "degrade_link", 0, 2.0),
+                          FaultEvent(1.0, "restore_link", 0)],
+                         fab.topology)
+        assert [f.severity for f in fs] == ["warning"]
+
+
+# ------------------------------------------------------------------- obs
+class TestObsFaultViews:
+    def run_traced(self):
+        fab = Fabric(n_ports=2)
+        tr = MemoryTracer()
+        sched = RecordingScheduler(make_scheduler("msa"))
+        simulate(one_flow_job(), sched, fabric=fab,
+                 faults=window_events(),
+                 retransmit=RetransmitPolicy("window", 0.5), tracer=tr)
+        return tr, sched
+
+    def test_downtime_windows_and_link_downtime(self):
+        tr, _ = self.run_traced()
+        assert downtime_windows(tr) == {0: [(1.0, 3.0)]}
+        assert link_downtime(tr) == {0: pytest.approx(2.0)}
+
+    def test_counters_carry_fault_totals(self):
+        tr, _ = self.run_traced()
+        c = scheduler_counters(tr)
+        assert c["n_fault_events"] == 2
+        assert c["n_retransmit_events"] == 1
+        assert c["retransmitted_bytes"] == pytest.approx(0.5)
+
+    def test_decision_records_cross_check_downtime(self):
+        """Sanitizer DecisionRecords agree with the tracer's downtime
+        view: the failed link's capacity is 0 exactly inside the
+        window."""
+        tr, sched = self.run_traced()
+        (link, ((t0, t1),)), = downtime_windows(tr).items()
+        for rec in sched.records:
+            if t0 <= rec.t < t1:
+                assert rec.link_cap[link] == 0.0
+            else:
+                assert rec.link_cap[link] == 1.0
+
+    def test_chrome_trace_shows_failure_window(self):
+        tr, _ = self.run_traced()
+        doc = chrome_trace(tr)
+        names = [e.get("name") for e in doc["traceEvents"]]
+        assert "fail_link[0]" in names and "repair_link[0]" in names
+        down = [e for e in doc["traceEvents"]
+                if str(e.get("name", "")).startswith("down:")]
+        assert len(down) == 1 and down[0]["ph"] == "X"
+        assert down[0]["dur"] == pytest.approx(2.0 * 1e6)
+        json.dumps(doc)                       # serializable end to end
+
+    def test_jsonl_carries_fault_events(self):
+        tr, _ = self.run_traced()
+        kinds = {rec["ev"] for rec in jsonl_events(tr)}
+        assert {"fault", "retransmit"} <= kinds
+
+    def test_traced_chaos_run_is_bit_identical_to_untraced(self):
+        from repro.appdag.mixer import build_scenario
+        outs = []
+        for tracer in (None, MemoryTracer()):
+            fabric, jobs = build_scenario("mixed", seed=1, quick=True)
+            spec = chaos_spec(fabric, jobs, 1.0, seed=1)
+            res = simulate(jobs, make_scheduler("msa"), fabric=fabric,
+                           faults=spec.compile(fabric.topology),
+                           retransmit=spec.retransmit, tracer=tracer)
+            outs.append((res.makespan, tuple(sorted(res.jct.items())),
+                         res.retransmitted_bytes, res.events))
+        assert outs[0] == outs[1]
+
+
+# ----------------------------------------------------------- experiments
+class TestResilienceSweep:
+    def test_spec_hash_unchanged_at_default_intensity(self):
+        base = SweepSpec(scenarios=("mixed",), policies=("msa",), n_seeds=2)
+        doc = base.to_json()
+        assert "fault_intensities" not in doc
+        assert SweepSpec.from_json(doc) == base
+
+    def test_chaos_cells_are_deterministic(self):
+        cell = Cell("mixed", "msa", "big_switch", 0, fault_intensity=1.0)
+        a = run_cell(cell, quick=True)
+        b = run_cell(cell, quick=True)
+        ra = {k: v for k, v in a["result"].items() if k != "wall_s"}
+        rb = {k: v for k, v in b["result"].items() if k != "wall_s"}
+        assert ra == rb
+        assert a["fault_intensity"] == 1.0
+        assert ra["n_faults"] >= 2
+
+    def test_fault_free_cell_record_has_no_new_keys(self):
+        rec = run_cell(Cell("mixed", "msa", "big_switch", 0), quick=True)
+        assert "fault_intensity" not in rec
+        for key in ("n_faults", "retransmitted_bytes", "stall_s",
+                    "flow_stall_s", "recovery_lag_s"):
+            assert key not in rec["result"]
+
+    def test_smoke_sweep_aggregates_and_checks(self, tmp_path):
+        spec = resilience_spec(smoke=True)
+        docs = run_sweep(spec, tmp_path / "shards", workers=1)
+        doc = aggregate_resilience(spec, docs)
+        assert check_resilience(doc) == []
+        # Paired degradation is exactly 1 at intensity 0.
+        for key, entry in doc["results"].items():
+            if entry["fault_intensity"] == 0.0:
+                assert entry["jct_degradation"]["mean"] == 1.0
+        # The headline curve covers every intensity.
+        assert len(doc["headline_curve"]) == len(spec.fault_intensities)
+        # Aggregation is bit-reproducible from the same shards.
+        doc2 = aggregate_resilience(spec, docs)
+        assert doc["fingerprint"] == doc2["fingerprint"]
+
+    def test_plain_aggregate_rejects_fault_axis(self):
+        from repro.experiments import aggregate
+        spec = resilience_spec(smoke=True)
+        with pytest.raises(ValueError, match="fault axis"):
+            aggregate(spec, [])
