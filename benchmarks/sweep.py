@@ -25,9 +25,13 @@ Usage:
       [--stop-after-shards K] [--out PATH] [--trace DIR] [--verbose]
 
 ``--analyze`` makes every cell also carry its LP-free per-job JCT/CCT
-lower bounds (``repro.analysis.bounds``; achieved times are asserted to
-never beat them), and the aggregate reports the mean optimality gap
-(achieved avg over bound) per (scenario, policy).  Analyze is a runner
+lower bounds (``repro.analysis.bounds``, tight load+chain composition)
+and the certified cross-job batch makespan bound
+(``repro.analysis.contention``); achieved times are asserted to never
+beat them, and the aggregate reports the mean optimality/makespan gaps
+per (scenario, policy) plus the static ``structure`` block
+(``repro.analysis.structure``: spectrum classification and the
+predicted-vs-measured MSA-advantage ranking).  Analyze is a runner
 knob, not part of the spec — ``spec_hash`` and plain-sweep fingerprints
 are unchanged.
 
@@ -244,14 +248,36 @@ def main() -> None:
         print(msg)
 
     if args.analyze:
-        gap_rows = [(k, e["optimality_gap"]["mean"])
-                    for k, e in doc["results"].items()
-                    if "optimality_gap" in e]
-        for k, g in sorted(gap_rows):
-            print(f"  optimality gap {k}: {g:.3f}x over LP-free bound")
+        gap_rows = [
+            (k, e["optimality_gap"]["mean"], e.get("makespan_gap", {}).get("mean"))
+            for k, e in doc["results"].items()
+            if "optimality_gap" in e
+        ]
+        for k, g, mg in sorted(gap_rows):
+            batch = f", makespan {mg:.3f}x over batch bound" if mg else ""
+            print(f"  optimality gap {k}: {g:.3f}x over LP-free bound{batch}")
         if not gap_rows:
-            print("  no optimality gaps in aggregate: resumed shards "
-                  "lack bounds (re-run with --no-resume)", file=sys.stderr)
+            print(
+                "  no optimality gaps in aggregate: resumed shards "
+                "lack bounds (re-run with --no-resume)",
+                file=sys.stderr,
+            )
+        struct = doc.get("structure")
+        if struct:
+            for scen, s in sorted(struct["scenarios"].items()):
+                print(
+                    f"  structure {scen}: {s['classification']} "
+                    f"(score {s['msa_advantage_score']:.3f}, barrier "
+                    f"density {s['barrier_density']:.2f}, comm fraction "
+                    f"{s['comm_fraction']:.2f})"
+                )
+            ranking = " > ".join(struct["predicted_ranking"])
+            print(f"  predicted MSA advantage: {ranking}")
+            agree = struct.get("rank_agreement")
+            if struct["measured_ranking"]:
+                measured = " > ".join(struct["measured_ranking"])
+                tail = f"  (rank agreement {agree:.2f})" if agree is not None else ""
+                print(f"  measured msa-vs-varys:   {measured}{tail}")
 
     with open(out) as fh:  # validate what actually landed on disk
         errs = check(json.load(fh))

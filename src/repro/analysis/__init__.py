@@ -1,20 +1,32 @@
-"""Static analysis over the metaflow pipeline (DESIGN.md §13).
+"""Static analysis over the metaflow pipeline (DESIGN.md §13, §16).
 
-Three layers, all LP- and simulation-free:
+Five layers, all LP- and simulation-free:
 
 * :mod:`repro.analysis.lint` — named checks over ``JobDAG`` batches and
   compiled scenarios, returning structured ``Finding``s;
 * :mod:`repro.analysis.bounds` — per-metaflow CCT and per-job JCT lower
-  bounds (link bound x DAG critical path), the optimality-gap
-  denominator;
+  bounds (link bound x DAG critical path, composed per node into the
+  load+chain bound), the optimality-gap denominator;
+* :mod:`repro.analysis.contention` — the cross-job contention graph and
+  certified batch-level makespan/CCT bounds;
+* :mod:`repro.analysis.structure` — the static workload characterizer:
+  spectrum metrics (flow↔metaflow↔coflow), per-scenario classification
+  and the predicted MSA-advantage ranking;
 * :mod:`repro.analysis.sanitize` — the ``Decision`` invariant engine
   behind ``Simulator(debug_checks=True)`` and post-hoc trace audits.
+
+``python -m repro.analysis`` (:mod:`repro.analysis.cli`) fronts lint and
+structure-check as the CI analyze gate.
 """
 
-from repro.analysis.bounds import (assert_bounds_hold, job_lower_bounds,
-                                   link_seconds, mean_gap,
+from repro.analysis.bounds import (assert_bounds_hold, flow_link_bytes,
+                                   job_lower_bounds, link_seconds, mean_gap,
                                    mf_cct_lower_bound,
                                    scenario_lower_bounds)
+from repro.analysis.contention import (BatchBounds, LinkContention,
+                                       assert_batch_bounds_hold,
+                                       batch_bounds, contention_graph,
+                                       link_load_bound)
 from repro.analysis.lint import (Finding, LintError, available_checks,
                                  check, expected_wire_bytes, lint_faults,
                                  lint_jobs, lint_lowered, lint_scenario,
@@ -23,14 +35,21 @@ from repro.analysis.sanitize import (DecisionRecord, InvariantViolation,
                                      RecordingScheduler,
                                      available_invariants, audit_decision,
                                      audit_record, audit_trace, invariant)
+from repro.analysis.structure import (SPECTRUM, JobStructure,
+                                      ScenarioStructure, job_structure,
+                                      predicted_ranking, rank_agreement,
+                                      scenario_structure)
 
 __all__ = [
-    "DecisionRecord", "Finding", "InvariantViolation", "LintError",
-    "RecordingScheduler", "assert_bounds_hold", "audit_decision",
-    "audit_record", "audit_trace", "available_checks",
-    "available_invariants", "check", "expected_wire_bytes",
-    "invariant", "job_lower_bounds", "link_seconds", "lint_faults",
-    "lint_jobs",
-    "lint_lowered", "lint_scenario", "mean_gap", "mf_cct_lower_bound",
-    "scenario_lower_bounds", "strict",
+    "SPECTRUM", "BatchBounds", "DecisionRecord", "Finding",
+    "InvariantViolation", "JobStructure", "LinkContention", "LintError",
+    "RecordingScheduler", "ScenarioStructure", "assert_batch_bounds_hold",
+    "assert_bounds_hold", "audit_decision", "audit_record", "audit_trace",
+    "available_checks", "available_invariants", "batch_bounds", "check",
+    "contention_graph", "expected_wire_bytes", "flow_link_bytes",
+    "invariant", "job_lower_bounds", "job_structure", "link_load_bound",
+    "link_seconds", "lint_faults", "lint_jobs", "lint_lowered",
+    "lint_scenario", "mean_gap", "mf_cct_lower_bound",
+    "predicted_ranking", "rank_agreement", "scenario_lower_bounds",
+    "scenario_structure", "strict",
 ]

@@ -1,5 +1,5 @@
-"""``python -m repro.analysis``: the scenario-lint CLI (CI analyze gate)."""
+"""``python -m repro.analysis``: lint + structure-check CLI (CI analyze gate)."""
 
-from repro.analysis.lint import main
+from repro.analysis.cli import main
 
 raise SystemExit(main())

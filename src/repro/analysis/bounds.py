@@ -20,11 +20,29 @@ unperturbed fabric:
   One topological DP per job; the max over metaflow nodes lower-bounds
   the CCT, the max over all nodes the JCT.
 
-Both relaxations ignore cross-job contention and scheduling altogether,
-so ``bound <= achieved`` for every policy — the achieved/bound ratio is
-the per-job *optimality gap* (>= 1, smaller is better) that ``run_cell
-(analyze=True)`` attaches to every :class:`~repro.core.results.
-RunResult` and ``repro.experiments.aggregate`` summarizes per policy.
+The default (``tight=True``) composes the two per *node* — the
+load+chain shape of Shafiee & Ghaderi's "Scheduling Coflows with
+Dependency Graph": every metaflow in a node's transitive dependency
+closure must finish before the node does, and those metaflows' flows
+all share the fabric, so
+
+    ``finish(n) >= link_seconds(flows of mf-ancestors(n))``
+    (``+ load(n)`` for a compute node: its work runs strictly after)
+
+joins the DP as an extra ``max`` term per node.  Every term of the
+PR-6 bound (``tight=False``) is retained, so the tight bound dominates
+it by construction — ``tests/test_analysis.py`` checks the dominance
+exactly on randomized workloads — while remaining schedule-free: the
+load term never assumes serialization between incomparable metaflows,
+only that their bytes cross capacitated links.
+
+Both relaxations ignore cross-job contention (see
+:mod:`repro.analysis.contention` for the batch-level load+chain bounds
+that do account for it), so ``bound <= achieved`` for every policy —
+the achieved/bound ratio is the per-job *optimality gap* (>= 1, smaller
+is better) that ``run_cell(analyze=True)`` attaches to every
+:class:`~repro.core.results.RunResult` and
+``repro.experiments.aggregate`` summarizes per policy.
 
 The bounds read template state only (``Flow.size``, ``ComputeTask.
 load``, the DAG edges — never ``remaining``/``finish_time``), so they
@@ -35,22 +53,36 @@ the nominal topology remain valid there too.
 
 from __future__ import annotations
 
+from collections.abc import Iterable
+
 from repro.core.fabric import Topology
-from repro.core.metaflow import JobDAG, Metaflow
+from repro.core.metaflow import Flow, JobDAG, Metaflow
 
 
-def link_seconds(flows, topology: Topology) -> float:
-    """Link bound for one flow set: ``max_link(bytes / cap)`` with every
-    flow routed via ``Topology.path`` (0.0 for an empty set)."""
+def flow_link_bytes(flows: Iterable[Flow],
+                    topology: Topology) -> dict[int, float]:
+    """Per-link byte totals of one flow set, routed via
+    ``Topology.path`` (degenerate flows — zero bytes, self-flows — push
+    nothing)."""
     link_bytes: dict[int, float] = {}
     for f in flows:
         if f.size <= 0 or f.src == f.dst:
             continue
         for link in topology.path(f.src, f.dst):
             link_bytes[link] = link_bytes.get(link, 0.0) + f.size
+    return link_bytes
+
+
+def _seconds(link_bytes: dict[int, float], topology: Topology) -> float:
     return max((b / float(topology.cap[link])
                 for link, b in link_bytes.items()
                 if topology.cap[link] > 0), default=0.0)
+
+
+def link_seconds(flows: Iterable[Flow], topology: Topology) -> float:
+    """Link bound for one flow set: ``max_link(bytes / cap)`` with every
+    flow routed via ``Topology.path`` (0.0 for an empty set)."""
+    return _seconds(flow_link_bytes(flows, topology), topology)
 
 
 def mf_cct_lower_bound(mf: Metaflow, topology: Topology) -> float:
@@ -58,34 +90,36 @@ def mf_cct_lower_bound(mf: Metaflow, topology: Topology) -> float:
     return link_seconds(mf.flows, topology)
 
 
-def job_lower_bounds(job: JobDAG, topology: Topology,
-                     machine_speed: float = 1.0) -> tuple[float, float]:
-    """``(jct_lb, cct_lb)`` for one job, both measured from its arrival
-    (matching ``SimResult.jct`` / ``.cct`` semantics)."""
-    names = list(job.tasks) + list(job.metaflows)
-    weight: dict[str, float] = {}
-    for n, t in job.tasks.items():
-        weight[n] = t.load / machine_speed
-    mf_bound: dict[str, float] = {}
-    for n, mf in job.metaflows.items():
-        mf_bound[n] = mf_cct_lower_bound(mf, topology)
-        weight[n] = mf_bound[n]
+def _mf_ancestors(job: JobDAG, names: list[str],
+                  order: list[str]) -> dict[str, frozenset[str]]:
+    """Static transitive metaflow closure per node: every metaflow that
+    must *finish* before the node finishes (a metaflow contains itself).
+    Unlike ``JobDAG.unfinished_mf_requirements`` this never consults
+    ``done`` flags, so it reads identically pre- and post-simulation."""
+    req: dict[str, frozenset[str]] = {}
+    for n in order:                      # Kahn order: deps already solved
+        acc: set[str] = set()
+        if n in job.metaflows:
+            acc.add(n)
+        for d in job.node(n).deps:
+            acc |= req[d]
+        req[n] = frozenset(acc)
+    return req
 
-    # Longest path to each node's completion (Kahn order — independent of
-    # JobDAG.validate so a linted-but-unvalidated DAG can't loop us).
+
+def _kahn_order(job: JobDAG, names: list[str]) -> list[str]:
+    """Topological order (independent of ``JobDAG.validate`` so a
+    linted-but-unvalidated DAG can't loop us); raises on a cycle."""
     indeg = {n: len(job.node(n).deps) for n in names}
     out: dict[str, list[str]] = {n: [] for n in names}
     for n in names:
         for d in job.node(n).deps:
             out[d].append(n)
     frontier = [n for n in names if indeg[n] == 0]
-    dist: dict[str, float] = {}
     order: list[str] = []
     while frontier:
         n = frontier.pop()
         order.append(n)
-        dist[n] = weight[n] + max((dist[d] for d in job.node(n).deps),
-                                  default=0.0)
         for m in out[n]:
             indeg[m] -= 1
             if indeg[m] == 0:
@@ -93,6 +127,56 @@ def job_lower_bounds(job: JobDAG, topology: Topology,
     if len(order) != len(names):
         raise ValueError(f"job {job.name!r} has a dependency cycle; "
                          "lint it before bounding")
+    return order
+
+
+def job_lower_bounds(job: JobDAG, topology: Topology,
+                     machine_speed: float = 1.0,
+                     tight: bool = True) -> tuple[float, float]:
+    """``(jct_lb, cct_lb)`` for one job, both measured from its arrival
+    (matching ``SimResult.jct`` / ``.cct`` semantics).
+
+    ``tight=True`` (default) adds the per-node load+chain terms (module
+    docstring); ``tight=False`` is the PR-6 chain-only bound, kept so
+    the dominance of the tight composition stays exactly testable."""
+    names = list(job.tasks) + list(job.metaflows)
+    order = _kahn_order(job, names)
+
+    weight: dict[str, float] = {}
+    mf_bytes: dict[str, dict[int, float]] = {}
+    for n, t in job.tasks.items():
+        weight[n] = t.load / machine_speed
+    for n, mf in job.metaflows.items():
+        mf_bytes[n] = flow_link_bytes(mf.flows, topology)
+        weight[n] = _seconds(mf_bytes[n], topology)
+
+    req = _mf_ancestors(job, names, order) if tight else {}
+    # Load term per distinct closure (many nodes share one): the bytes
+    # of every required metaflow, summed per link, then max_l bytes/cap.
+    closure_seconds: dict[frozenset[str], float] = {}
+
+    def load_term(mfs: frozenset[str]) -> float:
+        hit = closure_seconds.get(mfs)
+        if hit is None:
+            acc: dict[int, float] = {}
+            for m in mfs:
+                for link, b in mf_bytes[m].items():
+                    acc[link] = acc.get(link, 0.0) + b
+            hit = closure_seconds[mfs] = _seconds(acc, topology)
+        return hit
+
+    # Longest path to each node's completion, with the per-node load
+    # floor folded in so it propagates down every downstream chain.
+    dist: dict[str, float] = {}
+    for n in order:
+        d = weight[n] + max((dist[p] for p in job.node(n).deps),
+                            default=0.0)
+        if tight:
+            floor = load_term(req[n])
+            if n in job.tasks:
+                floor += weight[n]       # compute strictly after its mfs
+            d = max(d, floor)
+        dist[n] = d
 
     # All of a job's flows (across metaflows) share the fabric too.
     whole = link_seconds((f for mf in job.metaflows.values()
@@ -103,14 +187,14 @@ def job_lower_bounds(job: JobDAG, topology: Topology,
 
 
 def scenario_lower_bounds(jobs: list[JobDAG], topology: Topology,
-                          machine_speed: float = 1.0
+                          machine_speed: float = 1.0, tight: bool = True
                           ) -> tuple[dict[str, float], dict[str, float]]:
     """Per-job ``(jct_bound, cct_bound)`` maps for a whole batch."""
     jct_b: dict[str, float] = {}
     cct_b: dict[str, float] = {}
     for j in jobs:
         jct_b[j.name], cct_b[j.name] = job_lower_bounds(
-            j, topology, machine_speed=machine_speed)
+            j, topology, machine_speed=machine_speed, tight=tight)
     return jct_b, cct_b
 
 

@@ -63,7 +63,6 @@ error-severity finding).
 
 from __future__ import annotations
 
-import argparse
 import math
 from collections.abc import Callable, Iterable, Iterator
 from dataclasses import dataclass
@@ -490,50 +489,11 @@ def lint_scenario(name: str, seed: int = 0, quick: bool = False,
 
 
 def main(argv: list[str] | None = None) -> int:
-    from repro.appdag.mixer import SCENARIOS
-    ap = argparse.ArgumentParser(
-        description="Lint registered scenarios; exit 1 on any "
-                    "error-severity finding (the CI analyze gate).")
-    ap.add_argument("--scenario", action="append", choices=sorted(SCENARIOS),
-                    help="scenario to lint (repeatable; default: all)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--quick", action="store_true",
-                    help="quick workload profile (CI)")
-    ap.add_argument("--fault-intensity", type=float, default=0.0,
-                    help="also compile each scenario's chaos fault stream "
-                         "at this intensity and lint it (0 = skip)")
-    ap.add_argument("--verbose", action="store_true",
-                    help="print every warning (errors always print)")
-    args = ap.parse_args(argv)
-    scenarios = args.scenario or sorted(SCENARIOS)
-    n_err = 0
-    for scen in scenarios:
-        findings = lint_scenario(scen, seed=args.seed, quick=args.quick)
-        if args.fault_intensity:
-            from repro.appdag.mixer import build_scenario
-            from repro.faults import chaos_spec
-            fabric, jobs = build_scenario(scen, seed=args.seed,
-                                          quick=args.quick, lint=False)
-            spec = chaos_spec(fabric, jobs, args.fault_intensity,
-                              seed=args.seed)
-            findings += lint_faults(spec.compile(lint=False),
-                                    fabric.topology)
-        errs = [f for f in findings if f.severity == "error"]
-        warns = [f for f in findings if f.severity == "warning"]
-        n_err += len(errs)
-        status = "FAIL" if errs else "ok"
-        print(f"{scen:<24} {status}  ({len(errs)} error(s), "
-              f"{len(warns)} warning(s))")
-        shown = findings if args.verbose else errs
-        for f in shown:
-            print(f"  {f}")
-        if not args.verbose and warns:
-            by_check: dict[str, int] = {}
-            for f in warns:
-                by_check[f.check] = by_check.get(f.check, 0) + 1
-            summary = ", ".join(f"{k} x{v}" for k, v in sorted(by_check.items()))
-            print(f"  warnings: {summary}")
-    return 1 if n_err else 0
+    """Back-compat shim: the CLI moved to :mod:`repro.analysis.cli`
+    (which adds ``--structure`` / ``--json``); same flags, same exit
+    semantics (1 iff any error-severity finding)."""
+    from repro.analysis.cli import main as cli_main
+    return cli_main(argv)
 
 
 if __name__ == "__main__":

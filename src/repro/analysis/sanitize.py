@@ -37,9 +37,11 @@ Invariants (``available_invariants()``):
 from __future__ import annotations
 
 from collections.abc import Callable, Iterable, Iterator
+from typing import Any
 from dataclasses import dataclass
 
 import numpy as np
+import numpy.typing as npt
 
 from repro.analysis.lint import Finding
 from repro.core.metaflow import EPS
@@ -70,18 +72,18 @@ class DecisionRecord:
     the state the policy actually decided on."""
 
     t: float
-    rem: np.ndarray            # [F] remaining bytes per view flow
-    rates: np.ndarray          # [F] the decision's dense rate vector
-    lp: np.ndarray             # flow->links CSR offsets
-    li: np.ndarray             # flow->links CSR link ids
-    link_cap: np.ndarray       # [L] current link capacities
+    rem: npt.NDArray[np.float64]       # [F] remaining bytes per view flow
+    rates: npt.NDArray[np.float64]     # [F] the decision's dense rate vector
+    lp: npt.NDArray[np.int_]           # flow->links CSR offsets
+    li: npt.NDArray[np.int_]           # flow->links CSR link ids
+    link_cap: npt.NDArray[np.float64]  # [L] current link capacities
     n_links: int
     order: tuple[tuple[str, str], ...]
     live_pairs: tuple[tuple[str, str], ...]   # live (job, metaflow) pairs
     link_names: tuple[str, ...] | None = None
 
     @classmethod
-    def from_view(cls, view, decision) -> "DecisionRecord":
+    def from_view(cls, view: Any, decision: Any) -> DecisionRecord:
         live = tuple((rec.pair or (rec.job.name, rec.name))
                      for rec in view.active
                      if view.mf_remaining(rec) > EPS)
@@ -97,13 +99,13 @@ class DecisionRecord:
             link_names=(tuple(view.link_names)
                         if view.link_names else None))
 
-    def link_load(self) -> np.ndarray:
+    def link_load(self) -> npt.NDArray[np.float64]:
         """Per-link summed rate, via the flow->links CSR."""
         cnt = np.diff(self.lp)
         return np.bincount(self.li, weights=np.repeat(self.rates, cnt),
                            minlength=self.n_links)
 
-    def _link_label(self, link: int):
+    def _link_label(self, link: int) -> str | int:
         return self.link_names[link] if self.link_names else link
 
 
@@ -209,7 +211,7 @@ def audit_record(rec: DecisionRecord,
     return out
 
 
-def audit_decision(view, decision,
+def audit_decision(view: Any, decision: Any,
                    invariants: Iterable[str] | None = None,
                    raise_on_error: bool = True) -> list[Finding]:
     """Snapshot and audit one live ``(view, decision)`` pair — the
@@ -240,35 +242,35 @@ class RecordingScheduler:
     ``tests/test_topology.py``).
     """
 
-    def __init__(self, inner):
+    def __init__(self, inner: Any):
         self.inner = inner
         self.name = f"recorded({inner.name})"
         self.records: list[DecisionRecord] = []
 
     # lifecycle ------------------------------------------------------
-    def attach(self, fabric, jobs) -> None:
+    def attach(self, fabric: Any, jobs: Any) -> None:
         self.records.clear()            # attach resets run state
         self.inner.attach(fabric, jobs)
 
-    def on_job_arrival(self, job) -> bool:
+    def on_job_arrival(self, job: Any) -> bool:
         return self.inner.on_job_arrival(job)
 
-    def on_node_finish(self, job, name: str) -> bool:
+    def on_node_finish(self, job: Any, name: str) -> bool:
         return self.inner.on_node_finish(job, name)
 
-    def on_flow_finish(self, job, mf_name: str) -> bool:
+    def on_flow_finish(self, job: Any, mf_name: str) -> bool:
         return self.inner.on_flow_finish(job, mf_name)
 
-    def on_perturbation(self, perturbation) -> bool:
+    def on_perturbation(self, perturbation: Any) -> bool:
         return self.inner.on_perturbation(perturbation)
 
     # decisions ------------------------------------------------------
-    def schedule(self, view):
+    def schedule(self, view: Any) -> Any:
         decision = self.inner.schedule(view)
         self.records.append(DecisionRecord.from_view(view, decision))
         return decision
 
-    def refresh(self, view, prev):
+    def refresh(self, view: Any, prev: Any) -> Any:
         decision = self.inner.refresh(view, prev)
         self.records.append(DecisionRecord.from_view(view, decision))
         return decision

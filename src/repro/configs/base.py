@@ -97,7 +97,7 @@ class ModelConfig:
             return True
         return self.sliding_window > 0
 
-    def smoke(self, **overrides) -> "ModelConfig":
+    def smoke(self, **overrides) -> ModelConfig:
         """Reduced same-family twin for CPU smoke tests."""
         small = dict(
             n_layers=max(2, min(4, self.n_layers)),

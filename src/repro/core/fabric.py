@@ -566,7 +566,7 @@ class Fabric:
         """The current hard-down link set (for ``route_avoiding``)."""
         return frozenset(int(i) for i in np.nonzero(self.down)[0])
 
-    def residual(self) -> "Residual":
+    def residual(self) -> Residual:
         return Residual(cap=self.cap.tolist(), route=self.topology.path)
 
 

@@ -280,7 +280,7 @@ class JobDAG:
                     port_map: dict[int, int] | None = None,
                     comm_scale: float = 1.0,
                     compute_scale: float = 1.0,
-                    n_ports: int | None = None) -> "JobDAG":
+                    n_ports: int | None = None) -> JobDAG:
         """Fresh runnable copy of this DAG treated as a template.
 
         Simulation mutates jobs (remaining sizes, finish times), so

@@ -39,6 +39,10 @@ class RunResult:
     # artifacts (and their fingerprints) are byte-identical to before.
     jct_bound: dict[str, float] | None = None
     cct_bound: dict[str, float] | None = None
+    # Certified batch-level makespan lower bound (repro.analysis.
+    # contention) — the cross-job load+chain composition; analyze-mode
+    # only, omitted when None like the per-job bounds above.
+    makespan_bound: float | None = None
     # Applied fabric degrade/restore events.  Previously invisible in any
     # output; serialization omits the default 0 (perturbation-free runs —
     # all pinned artifacts — stay byte-identical).
@@ -62,7 +66,8 @@ class RunResult:
     def from_sim(cls, res: SimResult, wall_s: float = 0.0,
                  jct_bound: dict[str, float] | None = None,
                  cct_bound: dict[str, float] | None = None,
-                 trace_counters: dict | None = None) -> "RunResult":
+                 makespan_bound: float | None = None,
+                 trace_counters: dict | None = None) -> RunResult:
         return cls(n_jobs=len(res.jct), avg_jct=res.avg_jct,
                    avg_cct=res.avg_cct, makespan=res.makespan,
                    events=res.events, sched_full=res.sched_full,
@@ -70,6 +75,7 @@ class RunResult:
                    cct=dict(res.cct), wall_s=wall_s,
                    jct_bound=dict(jct_bound) if jct_bound else None,
                    cct_bound=dict(cct_bound) if cct_bound else None,
+                   makespan_bound=makespan_bound,
                    n_perturbations=res.n_perturbations,
                    trace_counters=dict(trace_counters)
                    if trace_counters else None,
@@ -89,6 +95,8 @@ class RunResult:
             doc["jct_bound"] = dict(self.jct_bound)
         if self.cct_bound is not None:
             doc["cct_bound"] = dict(self.cct_bound)
+        if self.makespan_bound is not None:
+            doc["makespan_bound"] = self.makespan_bound
         if self.n_perturbations:
             doc["n_perturbations"] = self.n_perturbations
         if self.trace_counters is not None:
@@ -106,7 +114,7 @@ class RunResult:
         return doc
 
     @classmethod
-    def from_json(cls, doc: dict) -> "RunResult":
+    def from_json(cls, doc: dict) -> RunResult:
         return cls(n_jobs=doc["n_jobs"], avg_jct=doc["avg_jct"],
                    avg_cct=doc["avg_cct"], makespan=doc["makespan"],
                    events=doc["events"], sched_full=doc["sched_full"],
@@ -114,6 +122,7 @@ class RunResult:
                    cct=dict(doc["cct"]), wall_s=doc["wall_s"],
                    jct_bound=doc.get("jct_bound"),
                    cct_bound=doc.get("cct_bound"),
+                   makespan_bound=doc.get("makespan_bound"),
                    n_perturbations=doc.get("n_perturbations", 0),
                    trace_counters=doc.get("trace_counters"),
                    n_faults=doc.get("n_faults", 0),

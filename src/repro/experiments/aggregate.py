@@ -110,6 +110,52 @@ def _flatten(spec: SweepSpec, shard_docs: list[dict]) -> dict:
     return got
 
 
+def _structure_block(spec: SweepSpec, got: dict, seeds: list[int]) -> dict:
+    """The aggregate's ``structure`` block: a pure function of the spec
+    (scenario rebuilds are deterministic in (name, seed, quick,
+    topology)) plus the wall-clock-free cell results, so it fingerprints
+    deterministically like everything else in the payload."""
+    from repro.analysis.structure import (
+        predicted_ranking,
+        rank_agreement,
+        scenario_structure,
+    )
+    from repro.appdag.mixer import build_scenario
+
+    structs = []
+    for scen in spec.scenarios:
+        concrete = resolve_topology(scen, spec.topologies[0])
+        fabric, jobs = build_scenario(
+            scen, seed=spec.seed0, quick=spec.quick, topology=concrete, lint=False
+        )
+        structs.append(scenario_structure(scen, jobs, fabric.topology))
+    pred = {s.scenario: s.msa_advantage_score for s in structs}
+    measured: dict[str, float] = {}
+    if "msa" in spec.policies and "varys" in spec.policies:
+        for scen in spec.scenarios:
+            concrete = resolve_topology(scen, spec.topologies[0])
+            ratios = [
+                got[(scen, "varys", concrete, s)]["avg_jct"]
+                / got[(scen, "msa", concrete, s)]["avg_jct"]
+                for s in seeds
+                if got[(scen, "msa", concrete, s)]["avg_jct"] > 0
+            ]
+            if ratios:
+                measured[scen] = sum(ratios) / len(ratios)
+    per_scen = {}
+    for s in structs:
+        sj = s.to_json()
+        del sj["jobs"]  # per-job detail stays in the CLI/report
+        per_scen[s.scenario] = sj
+    return {
+        "scenarios": per_scen,
+        "predicted_ranking": predicted_ranking(structs),
+        "measured_msa_over_varys": dict(sorted(measured.items())),
+        "measured_ranking": sorted(measured, key=lambda k: (-measured[k], k)),
+        "rank_agreement": rank_agreement(pred, measured),
+    }
+
+
 def aggregate(spec: SweepSpec, shard_docs: list[dict]) -> dict:
     """The full aggregate document (see module docstring)."""
     if spec.fault_intensities != (0.0,):
@@ -147,6 +193,13 @@ def aggregate(spec: SweepSpec, shard_docs: list[dict]) -> dict:
                     gaps = [g for g in gaps if g is not None]
                     if gaps:
                         entry["optimality_gap"] = mean_ci95(gaps)
+                # Batch-level gap vs the certified cross-job makespan
+                # bound (repro.analysis.contention) — same analyze-only
+                # byte-identity discipline as optimality_gap.
+                if all(r.get("makespan_bound") for r in runs):
+                    entry["makespan_gap"] = mean_ci95(
+                        [r["makespan"] / r["makespan_bound"] for r in runs]
+                    )
                 if base is not None and pol != spec.baseline:
                     ratios = [b["avg_jct"] / r["avg_jct"] for b, r in zip(base, runs)]
                     entry[f"speedup_over_{spec.baseline}"] = mean_ci95(ratios)
@@ -185,6 +238,13 @@ def aggregate(spec: SweepSpec, shard_docs: list[dict]) -> dict:
         }
 
     payload = {"spec": spec.to_json(), "results": results, "headline": headline}
+    # Analyze-mode sweeps additionally carry the static structure block:
+    # spectrum metrics per scenario, the predicted MSA-advantage ranking,
+    # and its Kendall agreement with the measured MSA-vs-varys speedups.
+    # Keyed off the same all-cells-carry-bounds condition as the gap
+    # entries, so plain sweeps keep a byte-identical payload.
+    if got and all(r.get("jct_bound") for r in got.values()):
+        payload["structure"] = _structure_block(spec, got, seeds)
     total_wall = sum(got[k]["wall_s"] for k in sorted(got))
     return {
         "bench": "experiments",
@@ -215,6 +275,12 @@ def check(doc: dict) -> list[str]:
             errs.append(
                 f"{key}: mean optimality gap {gap['mean']:.4f} < 1 "
                 "(achieved JCT beat its lower bound)"
+            )
+        mgap = entry.get("makespan_gap")
+        if mgap is not None and not (mgap["mean"] >= 1.0 - 1e-6):
+            errs.append(
+                f"{key}: mean makespan gap {mgap['mean']:.4f} < 1 "
+                "(achieved makespan beat the certified batch bound)"
             )
     head = doc.get("headline")
     if head is not None:

@@ -46,9 +46,11 @@ def run_cell(
     byte-identical records.
 
     ``analyze=True`` additionally computes the LP-free per-job lower
-    bounds (``repro.analysis.bounds``), asserts the achieved JCT/CCT
-    never beat them, and carries them in the result record — opt-in so
-    default artifacts stay byte-identical.
+    bounds (``repro.analysis.bounds``, tight load+chain composition)
+    and the certified cross-job batch bound
+    (``repro.analysis.contention``), asserts the achieved JCT/CCT/
+    makespan never beat them, and carries them in the result record —
+    opt-in so default artifacts stay byte-identical.
 
     ``trace_dir`` runs the cell with a ``repro.obs.MemoryTracer``
     attached (results stay bit-identical), writes
@@ -74,11 +76,13 @@ def run_cell(
         fault_spec = chaos_spec(fabric, jobs, cell.fault_intensity, seed=cell.seed)
         faults = fault_spec.compile(fabric.topology)
         retransmit = fault_spec.retransmit
-    jct_b = cct_b = None
+    jct_b = cct_b = batch_b = None
     if analyze:
         from repro.analysis.bounds import scenario_lower_bounds
+        from repro.analysis.contention import batch_bounds
 
         jct_b, cct_b = scenario_lower_bounds(jobs, fabric.topology)
+        batch_b = batch_bounds(jobs, fabric.topology)
     tracer = None
     if trace_dir is not None:
         # Deferred import: repro.obs builds on repro.core; the traced
@@ -104,10 +108,15 @@ def run_cell(
         raise AssertionError(msg)
     if analyze:
         from repro.analysis.bounds import assert_bounds_hold
+        from repro.analysis.contention import assert_batch_bounds_hold
 
         what = f"{cell.scenario}/{cell.policy}/seed{cell.seed} jct"
         assert_bounds_hold(res.jct, jct_b, what)
         assert_bounds_hold(res.cct, cct_b, what[:-3] + "cct")
+        # Fault-perturbed fabrics only lose capacity, so the nominal-
+        # topology batch bound stays a valid lower bound there too.
+        arrivals = {j.name: j.arrival for j in jobs}
+        assert_batch_bounds_hold(batch_b, res.makespan, res.cct, arrivals, what[:-4])
     counters = None
     if tracer is not None:
         from repro.obs import scheduler_counters, write_chrome_trace
@@ -127,6 +136,7 @@ def run_cell(
             wall_s=wall,
             jct_bound=jct_b,
             cct_bound=cct_b,
+            makespan_bound=batch_b.makespan_lb if batch_b else None,
             trace_counters=counters,
         ).to_json(),
     }

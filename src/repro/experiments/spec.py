@@ -164,7 +164,7 @@ class SweepSpec:
         return doc
 
     @classmethod
-    def from_json(cls, doc: dict) -> "SweepSpec":
+    def from_json(cls, doc: dict) -> SweepSpec:
         return cls(
             scenarios=tuple(doc["scenarios"]),
             policies=tuple(doc["policies"]),

@@ -34,7 +34,7 @@ from __future__ import annotations
 import random
 from dataclasses import dataclass
 
-from repro.core.fabric import Fabric
+from repro.core.fabric import Fabric, Topology
 from repro.core.metaflow import JobDAG
 from repro.core.simulator import FaultEvent, RetransmitPolicy, fault_key
 
@@ -138,15 +138,16 @@ class FaultSpec:
 
     horizon: float
     seed: int = 0
-    failures: tuple = ()      # LinkFailure / HostFailure instances
-    processes: tuple = ()     # FlakyLinks / StragglerBurst instances
+    failures: tuple[LinkFailure | HostFailure, ...] = ()
+    processes: tuple[FlakyLinks | StragglerBurst, ...] = ()
     retransmit: RetransmitPolicy | None = None
 
     def process_rng(self, index: int) -> random.Random:
         """The named, per-process seed stream (see module docstring)."""
         return random.Random((self.seed + FAULT_STREAM) * 1_000_003 + index)
 
-    def compile(self, topology=None, lint: bool = True) -> list[FaultEvent]:
+    def compile(self, topology: Topology | None = None,
+                lint: bool = True) -> list[FaultEvent]:
         """Expand to the sorted event stream.  ``lint=True`` (default)
         strict-lints it — error findings raise ``LintError``; pass the
         topology so target-range checks see the real link/port counts."""
@@ -225,7 +226,7 @@ def chaos_spec(fabric: Fabric, jobs: list[JobDAG], intensity: float,
                   + [n_ports + p for p in active_ports]) or list(range(n_links))
     n_fail = max(1, round(intensity))
     fail_links = sorted(rng.sample(candidates, min(n_fail, len(candidates))))
-    failures = []
+    failures: list[LinkFailure | HostFailure] = []
     for link in fail_links:
         at = rng.uniform(0.05, 0.45) * horizon
         dur = rng.uniform(0.10, 0.25) * horizon
@@ -235,7 +236,7 @@ def chaos_spec(fabric: Fabric, jobs: list[JobDAG], intensity: float,
     pool = [link for link in range(n_links) if link not in set(fail_links)]
     n_flaky = min(len(pool), max(2, round(2 * intensity)))
     flaky_links = tuple(sorted(rng.sample(pool, n_flaky))) if n_flaky else ()
-    processes: list = []
+    processes: list[FlakyLinks | StragglerBurst] = []
     if flaky_links:
         processes.append(FlakyLinks(
             links=flaky_links,

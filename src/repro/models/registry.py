@@ -17,7 +17,8 @@ the enc-dec).  See launch/specs.py for the exact ShapeDtypeStructs.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, transformer

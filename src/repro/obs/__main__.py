@@ -8,7 +8,9 @@ Usage:
 Runs the cell with a ``MemoryTracer`` (and a ``RecordingScheduler``
 wrapper so decision records exist), prints the derived report
 (scheduler counters, top-K link utilization, mean job-phase
-decomposition), audits the trace-derived per-link busy-seconds against
+decomposition, the static structure summary and certified batch bound
+from ``repro.analysis``), audits the trace-derived per-link busy-seconds
+against
 an independent integration of the decision records, and optionally
 writes the Chrome ``trace_event`` JSON (``-o``, open in Perfetto or
 chrome://tracing) and/or the JSONL stream (``--jsonl``).
@@ -28,7 +30,9 @@ import sys
 
 import numpy as np
 
+from repro.analysis.contention import batch_bounds
 from repro.analysis.sanitize import RecordingScheduler
+from repro.analysis.structure import scenario_structure
 from repro.appdag import SCENARIOS, build_scenario
 from repro.core import make_scheduler, simulate
 from repro.core.sched import available_policies
@@ -173,6 +177,25 @@ def main(argv=None) -> int:
     topo = args.topology or "default"
     label = f"{args.scenario} / {args.policy} (topology {topo}, seed {args.seed})"
     report(trace, res, label, args.top)
+
+    # Static structure + certified batch bound (repro.analysis): reads
+    # template state only, so computing it post-simulation is sound.
+    struct = scenario_structure(args.scenario, jobs, fabric.topology)
+    bb = batch_bounds(jobs, fabric.topology)
+    print(
+        f"structure: {struct.classification}  "
+        f"(msa-advantage score {struct.msa_advantage_score:.3f}, "
+        f"barrier density {struct.barrier_density:.2f}, "
+        f"comm fraction {struct.comm_fraction:.2f}, "
+        f"mf depth {struct.mf_depth:.1f}, fan-out {struct.fan_out:.1f})"
+    )
+    if bb.makespan_lb > 0:
+        print(
+            f"certified batch bound: makespan >= {bb.makespan_lb:.4g}  "
+            f"(achieved {res.makespan:.4g}, gap "
+            f"{res.makespan / bb.makespan_lb:.3f}x, "
+            f"bottleneck {bb.bottleneck})"
+        )
 
     errs: list[str] = []
     if recording:

@@ -15,7 +15,8 @@ asserted in tests/test_comm_schedule.py.
 
 from __future__ import annotations
 
-from typing import Any, Sequence
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,8 @@ topology where the paper's DAG-aware scheduling wins most (Fig. 3b).
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

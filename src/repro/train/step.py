@@ -10,7 +10,7 @@ MSA-ordered reduce-scatter (parallel/collectives.py) and int8 compression
 
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
