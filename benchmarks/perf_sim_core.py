@@ -18,6 +18,12 @@ Writes ``BENCH_sim_core.json``:
                          MSA size <= 500 (repro.obs overhead contract:
                          results must stay bit-identical; the tracked
                          walls quantify the tracing cost)
+  batched                the repro.core.simjax lockstep section
+                         (``--batched``): per registered scenario, the
+                         same N fifo seeds run numpy-sequentially vs as
+                         one jitted batch, per-lane JCT/CCT agreement
+                         asserted; headline is the 20-seed pipe_serve
+                         lane (ISSUE-10 gate: >= 5x warm)
   notes[]                anything skipped or capped (no silent caps)
 
 All wall times come from ``time.perf_counter()``.
@@ -25,7 +31,7 @@ All wall times come from ``time.perf_counter()``.
 Usage:
   PYTHONPATH=src python benchmarks/perf_sim_core.py [--out PATH]
       [--sizes N ...] [--policies NAME ...] [--seed N] [--smoke]
-      [--topology SPEC] [--overhead-only]
+      [--topology SPEC] [--overhead-only] [--batched [--batched-seeds N]]
 
 ``--overhead-only`` runs just the tracer-overhead pair (one traced +
 one untraced run at the largest requested MSA size) and merges the
@@ -137,6 +143,76 @@ def measure_tracer_overhead(pname: str, n_jobs: int, seed: int,
             if wall_off > 0 else 0.0,
             "n_trace_events": len(tracer.events),
             "avg_jct_bit_equal": res.avg_jct == off_row["avg_jct"]}
+
+
+#: Tolerance for batched-vs-numpy per-lane JCT/CCT agreement.  The JAX
+#: engine is not bit-exact (XLA reorders float accumulations); observed
+#: divergence on the registered scenarios is <= ~1e-12 seconds.
+BATCHED_TOL = 1e-6
+
+
+def run_batched_bench(seeds: int, scenarios=None, smoke: bool = False) -> dict:
+    """The DESIGN.md §17 lockstep-engine measurement: for each registered
+    scenario, run the same ``seeds`` fifo instances (a) sequentially on
+    the numpy core and (b) as one ``repro.core.simjax`` batch, assert
+    per-lane JCT/CCT agreement within ``BATCHED_TOL``, and record both
+    the warm (steady-state) and cold (compile-inclusive — one XLA trace
+    is shared by all lanes) batched walls.  The headline is the
+    pipe_serve lane: the paper's headline scenario and the shape where
+    the batched step is cheapest relative to numpy's per-event cost."""
+    from repro.appdag.mixer import SCENARIOS, build_scenario
+    from repro.core.simjax import pack_instance, run_fifo_batch
+
+    names = sorted(scenarios if scenarios is not None else SCENARIOS)
+    rows: list[dict] = []
+    notes = ["walls are single-process wall-clock on the bench host; "
+             "cold includes the jit trace + compile, amortized over all "
+             f"{seeds} lanes by the shared padded batch shape"]
+    for name in names:
+        cells = [build_scenario(name, seed=s, lint=False)
+                 for s in range(seeds)]
+        lanes = [pack_instance(fab, jobs) for fab, jobs in cells]
+        t0 = time.perf_counter()
+        batched = run_fifo_batch(lanes)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        batched = run_fifo_batch(lanes)
+        warm = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        seq = [simulate(jobs, make_scheduler("fifo"), fabric=fab)
+               for fab, jobs in cells]
+        seq_wall = time.perf_counter() - t0
+        diff = 0.0
+        for lane, ref in zip(batched, seq):
+            for jname, jct in ref.jct.items():
+                diff = max(diff, abs(lane.jct[jname] - jct))
+            for jname, cct in ref.cct.items():
+                diff = max(diff, abs(lane.cct[jname] - cct))
+        row = {"scenario": name, "lanes": seeds,
+               "numpy_seq_s": round(seq_wall, 3),
+               "batched_cold_s": round(cold, 3),
+               "batched_warm_s": round(warm, 3),
+               "speedup_warm": round(seq_wall / warm, 2),
+               "speedup_cold": round(seq_wall / cold, 2),
+               "max_abs_jct_diff": diff,
+               "max_lane_events": max(r.events for r in batched),
+               "flows_padded": max(p.flow_node.size for p in lanes)}
+        rows.append(row)
+        print(f"  batched   fifo   {name:<20} numpy {seq_wall:6.2f}s  "
+              f"warm {warm:6.2f}s  cold {cold:6.2f}s  "
+              f"({row['speedup_warm']:.2f}x warm)", flush=True)
+    out = {"engine": "repro.core.simjax", "policy": "fifo",
+           "seeds": seeds, "rows": rows, "notes": notes}
+    headline = next((r for r in rows if r["scenario"] == "pipe_serve"), None)
+    if headline is not None:
+        out["headline_scenario"] = "pipe_serve"
+        # The gated headline is defined at 20 lanes; a 3-lane smoke (or
+        # a custom --batched-seeds) must not masquerade as it.
+        if headline["lanes"] == 20:
+            out["speedup_batched_fifo_20seed"] = headline["speedup_warm"]
+    elif not smoke:
+        notes.append("pipe_serve not in scenario set: no headline speedup")
+    return out
 
 
 def _assert_equivalent(pname: str, n_jobs: int, seed: int) -> None:
@@ -257,6 +333,32 @@ def check(doc: dict, smoke: bool) -> list[str]:
         errs.append(f"traced run diverged from untraced "
                     f"({ov.get('policy')}@{ov.get('jobs')}): tracing must "
                     "be observational")
+    bt = doc.get("batched")
+    if bt is not None:
+        errs.extend(check_batched(bt, smoke))
+    return errs
+
+
+def check_batched(bt: dict, smoke: bool) -> list[str]:
+    """Validity gates for the ``batched`` section alone (the --batched
+    path merges into a possibly-older document, so it must not re-judge
+    rows it didn't produce)."""
+    errs = []
+    if not bt.get("rows"):
+        errs.append("batched section has no rows")
+    for r in bt.get("rows", ()):
+        if r.get("max_abs_jct_diff", BATCHED_TOL) >= BATCHED_TOL:
+            errs.append(f"batched engine diverged from numpy on "
+                        f"{r.get('scenario')}: max |JCT/CCT diff| "
+                        f"{r.get('max_abs_jct_diff')} >= {BATCHED_TOL}")
+    if not smoke:
+        sp = bt.get("speedup_batched_fifo_20seed")
+        if sp is None:
+            errs.append("batched section missing the 20-seed fifo "
+                        "headline speedup")
+        elif sp < 5.0:
+            errs.append(f"20-seed fifo batched speedup {sp}x < 5x "
+                        "(ISSUE-10 gate, pipe_serve lane)")
     return errs
 
 
@@ -283,6 +385,15 @@ def main() -> None:
                     help="measure just the tracer overhead pair and merge "
                          "the tracer_overhead section into --out (keeps "
                          "the rest of an existing trajectory document)")
+    ap.add_argument("--batched", action="store_true",
+                    help="measure the repro.core.simjax lockstep engine "
+                         "(DESIGN.md §17): every registered scenario x "
+                         "--batched-seeds fifo lanes, numpy-sequential vs "
+                         "one batch, equivalence asserted; merges the "
+                         "'batched' section into --out")
+    ap.add_argument("--batched-seeds", type=int, default=20, metavar="N",
+                    help="lanes per scenario for --batched (default 20, "
+                         "the tracked artifact's profile)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -299,6 +410,29 @@ def main() -> None:
     if args.out is None:
         args.out = ("BENCH_sim_core.json" if args.topology == "big_switch"
                     else f"BENCH_sim_core_{args.topology}.json")
+
+    if args.batched:
+        seeds = 3 if args.smoke and args.batched_seeds == 20 \
+            else args.batched_seeds
+        scen = ("pipe_serve", "mixed") if args.smoke else None
+        bt = run_batched_bench(seeds, scenarios=scen, smoke=args.smoke)
+        try:
+            with open(args.out) as fh:
+                doc = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            doc = {"bench": "sim_core", "rows": [], "notes": []}
+        doc["batched"] = bt
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"merged batched section into {args.out}")
+        if "speedup_batched_fifo_20seed" in bt:
+            print(f"20-seed fifo batched speedup (pipe_serve): "
+                  f"{bt['speedup_batched_fifo_20seed']}x")
+        errs = check_batched(bt, smoke=args.smoke)
+        for e in errs:
+            print(f"CHECK-FAIL[sim_core]: {e}", file=sys.stderr)
+        sys.exit(1 if errs else 0)
 
     if args.overhead_only:
         pname = "msa" if "msa" in policies else policies[0]

@@ -1,0 +1,150 @@
+"""Render README.md's benchmark tables from the committed BENCH JSONs.
+
+The README's perf and scenario tables are *derived*, never hand-edited:
+each lives between a pair of ``<!-- table:NAME -->`` markers and is
+regenerated verbatim from ``BENCH_sim_core.json`` /
+``BENCH_experiments.json``.  ``--check`` re-renders in memory and diffs
+against the file on disk, so a table cannot silently drift from the
+committed measurement artifacts (the CI ``docs`` job runs it).
+
+Usage:
+  PYTHONPATH=src python benchmarks/render_tables.py          # rewrite README.md
+  PYTHONPATH=src python benchmarks/render_tables.py --check  # verify, exit 1 on drift
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+MARK = "<!-- table:{name} -->"
+END = "<!-- /table:{name} -->"
+
+
+def _wall(s: float) -> str:
+    return f"{s:.0f} s" if s >= 500 else f"{s:.1f} s"
+
+
+def render_sim_core(doc: dict) -> list[str]:
+    """Compacted-vs-reference MSA scaling table (the §10 compaction win)."""
+    rows = [r for r in doc["rows"] if r["policy"] == "msa"]
+    by = {(r["core"], r["jobs"]): r for r in rows}
+    sizes = sorted({r["jobs"] for r in rows})
+    out = [
+        "| jobs | events | compacted (MSA) | events/s | pre-compaction core | speedup |",
+        "| ---: | ---: | ---: | ---: | ---: | ---: |",
+    ]
+    for n in sizes:
+        c = by[("compacted", n)]
+        r = by.get(("reference", n))
+        if r is None:
+            ref, speed = "— (intractable)", "—"
+        else:
+            ref = _wall(r["wall_s"])
+            speed = f"{r['wall_s'] / c['wall_s']:.1f}x"
+            if n == 500:  # the gated headline (speedup_500_jobs_msa)
+                speed = f"**{speed}**"
+        out.append(
+            f"| {n} | {c['events'] / 1000:.1f}k | {_wall(c['wall_s'])} "
+            f"| {c['events_per_s']:.0f} | {ref} | {speed} |"
+        )
+    return out
+
+
+def render_batched(doc: dict) -> list[str]:
+    """Batched-vs-sequential fifo table from the ``batched`` section."""
+    bt = doc["batched"]
+    head = bt["headline_scenario"]
+    rows = sorted(bt["rows"],
+                  key=lambda r: (r["scenario"] != head, -r["speedup_warm"]))
+    out = [
+        "| scenario | lanes | numpy sequential | batched warm | warm | cold |",
+        "| --- | ---: | ---: | ---: | ---: | ---: |",
+    ]
+    for r in rows:
+        warm = f"{r['speedup_warm']:.2f}x"
+        if r["scenario"] == head:
+            warm = f"**{warm}**"
+        out.append(
+            f"| `{r['scenario']}` | {r['lanes']} | {r['numpy_seq_s']:.2f} s "
+            f"| {r['batched_warm_s']:.2f} s | {warm} "
+            f"| {r['speedup_cold']:.2f}x |"
+        )
+    return out
+
+
+def render_experiments(doc: dict) -> list[str]:
+    """Per-scenario MSA-vs-varys speedup (mean ± 95% CI over seeds)."""
+    head = doc["headline"]
+    pol, base = head["policy"], head["baseline"]
+    cells = [r for r in doc["results"].values()
+             if r["policy"] == pol and f"speedup_over_{base}" in r]
+    best = max(r[f"speedup_over_{base}"]["mean"] for r in cells)
+    cells.sort(key=lambda r: (r["scenario"] != head["scenario"],
+                              -r[f"speedup_over_{base}"]["mean"]))
+    out = [
+        f"| scenario | MSA vs {base} (95% CI) |",
+        "| --- | --- |",
+    ]
+    for r in cells:
+        s = r[f"speedup_over_{base}"]
+        val = f"{s['mean']:.2f} ± {s['ci95']:.2f}"
+        if r["scenario"] == head["scenario"] or s["mean"] == best:
+            val = f"**{val}**"
+        name = f"`{r['scenario']}`"
+        if r["scenario"] == head["scenario"]:
+            name += " (the headline cell)"
+        out.append(f"| {name} | {val} |")
+    return out
+
+
+def render_all() -> dict[str, str]:
+    sim = json.loads((REPO / "BENCH_sim_core.json").read_text())
+    exp = json.loads((REPO / "BENCH_experiments.json").read_text())
+    return {
+        "sim_core": "\n".join(render_sim_core(sim)),
+        "batched": "\n".join(render_batched(sim)),
+        "experiments": "\n".join(render_experiments(exp)),
+    }
+
+
+def splice(text: str, tables: dict[str, str]) -> str:
+    for name, body in tables.items():
+        begin, end = MARK.format(name=name), END.format(name=name)
+        if begin not in text or end not in text:
+            raise SystemExit(f"README.md is missing the {begin} … {end} "
+                             "marker pair")
+        pat = re.compile(re.escape(begin) + r"\n.*?" + re.escape(end),
+                         re.DOTALL)
+        text = pat.sub(f"{begin}\n{body}\n{end}", text, count=1)
+    return text
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="diff against README.md instead of rewriting it; "
+                         "exit 1 on drift")
+    args = ap.parse_args()
+    readme = REPO / "README.md"
+    on_disk = readme.read_text()
+    fresh = splice(on_disk, render_all())
+    if args.check:
+        if fresh != on_disk:
+            print("DOC-DRIFT[README.md]: tables disagree with the BENCH "
+                  "JSONs — regenerate with `PYTHONPATH=src python "
+                  "benchmarks/render_tables.py`", file=sys.stderr)
+            sys.exit(1)
+        print("README.md tables are up to date")
+        return
+    readme.write_text(fresh)
+    print(f"wrote {readme}")
+
+
+if __name__ == "__main__":
+    main()

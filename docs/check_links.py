@@ -1,0 +1,83 @@
+"""Doc link/anchor checker: citations must point at things that exist.
+
+Two classes of reference rot this catches (the CI ``docs`` job runs it):
+
+* **Section anchors** — code comments, docstrings, README and CHANGES
+  cite design contracts as ``DESIGN.md §N`` (optionally dotted, §8.5).
+  Every cited section number must have a matching ``## §N`` /
+  ``### §N.M`` heading in DESIGN.md, so a renumbering or a deleted
+  section fails the build instead of leaving dangling citations.
+* **Relative links** — every non-HTTP markdown link target in README.md
+  and docs/*.md must resolve to a file or directory in the repo.
+
+Usage:
+  python docs/check_links.py    # exit 1 listing every broken reference
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+CITATION = re.compile(r"DESIGN(?:\.md)?\s+§(\d+(?:\.\d+)?)")
+HEADING = re.compile(r"^#{2,}\s+§(\d+(?:\.\d+)?)\b", re.MULTILINE)
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def design_anchors() -> set[str]:
+    text = (REPO / "DESIGN.md").read_text()
+    return set(HEADING.findall(text))
+
+
+def cited_sections() -> list[tuple[Path, int, str]]:
+    """Every ``DESIGN.md §N`` citation as (file, line, section)."""
+    roots = [REPO / "src", REPO / "benchmarks", REPO / "tests",
+             REPO / "docs", REPO / "examples"]
+    files = [p for root in roots if root.exists()
+             for p in sorted(root.rglob("*.py")) + sorted(root.rglob("*.md"))]
+    files += [REPO / "README.md", REPO / "CHANGES.md"]
+    out = []
+    for path in files:
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            out.extend((path, i, sec) for sec in CITATION.findall(line))
+    return out
+
+
+def relative_links() -> list[tuple[Path, str]]:
+    docs = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+    out = []
+    for path in docs:
+        for target in MD_LINK.findall(path.read_text()):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            out.append((path, target))
+    return out
+
+
+def main() -> None:
+    anchors = design_anchors()
+    errors = []
+    for path, line, sec in cited_sections():
+        # A dotted citation is satisfied by its parent section too: §10's
+        # prose covers its unnumbered subsections.
+        if sec not in anchors and sec.split(".")[0] not in anchors:
+            rel = path.relative_to(REPO)
+            errors.append(f"{rel}:{line}: cites DESIGN.md §{sec}, "
+                          "which has no such heading")
+    for path, target in relative_links():
+        resolved = (path.parent / target.split("#")[0]).resolve()
+        if not resolved.exists():
+            rel = path.relative_to(REPO)
+            errors.append(f"{rel}: link target {target!r} does not exist")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        sys.exit(1)
+    n = len(cited_sections())
+    print(f"{n} DESIGN.md section citations and all relative doc links OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,27 @@ Five layers, all LP- and simulation-free:
 * :mod:`repro.analysis.sanitize` — the ``Decision`` invariant engine
   behind ``Simulator(debug_checks=True)`` and post-hoc trace audits.
 
-``python -m repro.analysis`` (:mod:`repro.analysis.cli`) fronts lint and
-structure-check as the CI analyze gate.
+Worked example — a certified lower bound, no simulation run::
+
+    >>> from repro.core import JobDAG, make_topology
+    >>> from repro.analysis import job_lower_bounds
+    >>> job = JobDAG("j0")
+    >>> _ = job.add_metaflow("m0", [(0, 1, 6.0), (0, 2, 2.0)])
+    >>> job_lower_bounds(job, make_topology("big_switch", 3))
+    (8.0, 8.0)
+
+(8 bytes leave host 0's unit-capacity up-link, so no schedule finishes
+the job before t=8; ``run_cell(analyze=True)`` asserts every simulated
+JCT/CCT respects these bounds.)
+
+``python -m repro.analysis`` (:mod:`repro.analysis.cli`) fronts lint
+and structure-check as the CI analyze gate::
+
+    python -m repro.analysis                  # lint every scenario
+    python -m repro.analysis --structure      # + spectrum/bound checks
+    python -m repro.analysis --json           # machine-readable findings
+
+It exits 1 only on error-severity findings (see DESIGN.md §16).
 """
 
 from repro.analysis.bounds import (assert_bounds_hold, flow_link_bytes,

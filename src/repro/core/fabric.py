@@ -54,7 +54,13 @@ class Topology:
     """A set of capacitated link resources plus deterministic routing.
 
     Subclasses fill ``cap`` / ``link_names`` and implement ``_route``;
-    ``path`` memoizes routes per (src, dst) pair (routing is pure)."""
+    ``path`` memoizes routes per (src, dst) pair (routing is pure).
+    Fault rerouting (DESIGN.md §15) rides on the same surface:
+    ``route_candidates`` enumerates the ordered equal-length alternates
+    (ECMP choice first), ``route_avoiding`` picks the first one clear of
+    a hard-down link set, and ``has_alternate_paths`` advertises whether
+    the subclass has any alternates at all — when ``False`` a flow on a
+    dead link stalls until repair instead of rerouting."""
 
     kind: str = "?"
 
@@ -387,7 +393,12 @@ class Fabric:
     ``Fabric(topology=...)`` binds any :class:`Topology`.  ``degrade``/
     ``restore`` model stragglers by scaling a *port's* host links on any
     topology; ``degrade_link``/``restore_link`` target single links
-    (e.g. one flaky leaf uplink)."""
+    (e.g. one flaky leaf uplink).  Hard failures are a separate axis
+    (DESIGN.md §15): ``fail_link``/``repair_link`` (and the host-level
+    ``fail_host``/``repair_host``) force capacity to zero and mark the
+    link in the ``down`` mask the simulator reroutes around — soft
+    degrades never touch ``down``, and a repair comes back at *nominal*
+    capacity (replaced hardware forgets pre-failure degradation)."""
 
     def __init__(self, n_ports: int | None = None,
                  egress: list[float] | None = None,

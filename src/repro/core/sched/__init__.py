@@ -11,8 +11,29 @@ resolves policies through, and the built-in policy family:
     fair   — per-flow max-min fairness
     cpath  — DAG-critical-path-first (Sincronia-style ordered policy)
 
-See DESIGN.md ("The scheduling-policy contract") for the caching
-semantics and how to add a policy.
+Worked example — resolve a policy by name and run it::
+
+    >>> from repro.core import JobDAG, simulate
+    >>> from repro.core.sched import available_policies, make_scheduler
+    >>> available_policies()
+    ('cpath', 'fair', 'fifo', 'msa', 'varys')
+    >>> job = JobDAG("j0")
+    >>> _ = job.add_metaflow("m0", [(0, 1, 8.0)])
+    >>> res = simulate([job], make_scheduler("fifo"), n_ports=2)
+    >>> res.jct["j0"]                   # 8 bytes over a unit-cap link
+    8.0
+
+Adding a policy is a decorator away (it then resolves everywhere —
+sweeps, benchmarks, CLIs — by its string key)::
+
+    @register("my_policy")
+    class MyScheduler(Scheduler):
+        ...
+
+See DESIGN.md §3 ("The scheduling-policy contract") for the caching
+semantics, the ``Decision`` invariants, and the lifecycle hooks; see
+DESIGN.md §17 for the extra contract a policy must satisfy to run on
+the batched JAX engine.
 """
 
 from repro.core.sched.base import Decision, Scheduler

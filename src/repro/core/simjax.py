@@ -1,0 +1,649 @@
+"""``repro.core.simjax`` — jitted, batched lockstep fifo engine (DESIGN.md §17).
+
+The numpy :class:`~repro.core.simulator.Simulator` advances one scenario
+instance at a time; a sweep is N independent Python processes.  This
+module ports the **fifo** hot path — MADD bottleneck walk over the
+flow→links table, dedup backfill, per-flow event horizons — to jitted
+JAX so B seeds/scenario-instances advance **in lockstep** as stacked
+arrays: one dispatch serves lane 0's event 312 and lane 19's event 87
+simultaneously.  Lanes are padded to the batch maxima (jobs, DAG nodes,
+flows, path length, links, routes) and finished lanes are masked
+no-ops, so a batch needs ``max(per-lane events)`` steps, not the union.
+
+Two structural choices keep the step fast on CPU XLA, where scatter
+serializes: every segment reduction (flow→metaflow, flow→job,
+edge→node, (job, link) demand) is a *static-permutation prefix-sum* —
+the index arrays are sorted at pack time, so a reduction is cumsum +
+two gathers — and both sequential sweeps (the MADD walk, the backfill)
+run as priority *waves*: any group whose contended links are free of
+higher-priority pending groups executes now, which reproduces the
+sequential order link-by-link (flows sharing a link always execute in
+key order across waves) while finishing in a handful of iterations.
+
+The numpy core stays the oracle (the ``simref.ReferenceSimulator``
+pattern): results agree per-lane on JCT/CCT within float tolerance —
+not bit-exact, because XLA may fuse and reorder float accumulations —
+and ``tests/test_simjax.py`` gates that on every registered scenario.
+Scope: fifo policy, fault-free, uniform ``machine_speed``; anything
+else runs on the numpy engine (``repro.experiments.run_cells_batched``
+routes accordingly).  The contract a policy must satisfy to join this
+engine is written down in DESIGN.md §17.
+
+Worked example — two seeds of a one-job scenario as one batch::
+
+    >>> from repro.core import Fabric
+    >>> from repro.core.metaflow import JobDAG
+    >>> def lane(size):
+    ...     job = JobDAG("j0")
+    ...     job.add_metaflow("m0", [(0, 1, size)])
+    ...     return pack_instance(Fabric(n_ports=2), [job])
+    >>> res = run_fifo_batch([lane(10.0), lane(30.0)])
+    >>> [r.jct["j0"] for r in res]      # unit caps: size / 1.0 seconds
+    [10.0, 30.0]
+
+The wall-clock win over sequential numpy runs for the 20-seed fifo
+lanes (≥5x on pipe_serve, the paper's headline scenario) is recorded
+in ``BENCH_sim_core.json`` by ``benchmarks/perf_sim_core.py
+--batched``, per scenario and with cold (compile-inclusive) numbers —
+batching also amortizes the jit trace: 20 lanes share one program.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+import jax
+
+# The engine is compared against a float64 oracle; JAX defaults to f32.
+# The flag is global, but every other JAX user in this repo
+# (src/repro/kernels) pins dtypes explicitly, so flipping it here is
+# safe for mixed test processes.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after the x64 flag, deliberately)
+from jax import lax  # noqa: E402
+
+from repro.core.fabric import Fabric  # noqa: E402
+from repro.core.metaflow import EPS, ComputeTask, JobDAG  # noqa: E402
+
+__all__ = [
+    "LaneResult",
+    "PackedInstance",
+    "pack_instance",
+    "run_fifo_batch",
+    "trace_count",
+]
+
+#: Priority-key sentinel larger than any real backfill key.
+_BIG = np.int64(2 ** 62)
+
+
+# --------------------------------------------------------------------- pack
+@dataclass(frozen=True)
+class PackedInstance:
+    """One scenario instance flattened to arrays (lane-local sizes).
+
+    Node space: per job (sorted by ``(arrival, name)``, the simulator's
+    admission and fifo priority order), compute tasks then metaflows in
+    DAG insertion order — the order the numpy core snapshots
+    dependency-free roots in, so same-event activation sequences agree.
+    Flows are packed metaflow-contiguously, so ``flow_node`` and the
+    derived ``flow_job`` are sorted — the invariant behind the
+    prefix-sum reductions.
+    """
+
+    job_names: tuple[str, ...]          # sorted by (arrival, name)
+    arrival: np.ndarray                 # [J] f8
+    node_job: np.ndarray                # [N] i4  owning job index
+    node_is_mf: np.ndarray              # [N] bool
+    node_load: np.ndarray               # [N] f8  compute load (0 for mfs)
+    node_pend: np.ndarray               # [N] i4  unmet dependency count
+    edge_parent: np.ndarray             # [E] i4
+    edge_child: np.ndarray              # [E] i4 (sorted)
+    flow_node: np.ndarray               # [F] i4  owning metaflow node
+    flow_size: np.ndarray               # [F] f8
+    flow_links: np.ndarray              # [F, L] i4, short paths padded
+    flow_pathid: np.ndarray             # [F] i4  equal iff same (src, dst)
+    link_cap: np.ndarray                # [n_links] f8
+    n_links: int
+    n_routes: int
+    machine_speed: float
+
+
+def pack_instance(fabric: Fabric, jobs: Sequence[JobDAG],
+                  machine_speed: float = 1.0) -> PackedInstance:
+    """Flatten ``(fabric, jobs)`` into the array form the batched engine
+    consumes.  Mirrors ``Simulator._build_tables``: job order, node
+    order, flow order, deterministic routes, and the per-``(src, dst)``
+    ``pathid`` keys all match the numpy core."""
+    for j in jobs:
+        j.validate()
+    names = [j.name for j in jobs]
+    if len(set(names)) != len(names):
+        raise ValueError("job names must be unique")
+    jobs = sorted(jobs, key=lambda j: (j.arrival, j.name))
+    topo = fabric.topology
+
+    node_id: dict[tuple[int, str], int] = {}
+    node_job: list[int] = []
+    node_is_mf: list[bool] = []
+    node_load: list[float] = []
+    node_pend: list[int] = []
+    edge_parent: list[int] = []
+    edge_child: list[int] = []
+    flow_node: list[int] = []
+    flow_size: list[float] = []
+    flow_paths: list[tuple[int, ...]] = []
+    flow_pathid: list[int] = []
+    route_ids: dict[tuple[int, int], int] = {}
+
+    for ji, job in enumerate(jobs):
+        for name in list(job.tasks) + list(job.metaflows):
+            node_id[(ji, name)] = len(node_job)
+            node = job.node(name)
+            node_job.append(ji)
+            is_mf = not isinstance(node, ComputeTask)
+            node_is_mf.append(is_mf)
+            node_load.append(0.0 if is_mf else float(node.load))
+            node_pend.append(len(node.deps))
+        for name in list(job.tasks) + list(job.metaflows):
+            nid = node_id[(ji, name)]
+            for dep in job.node(name).deps:
+                edge_parent.append(node_id[(ji, dep)])
+                edge_child.append(nid)
+        for mf in job.metaflows.values():
+            nid = node_id[(ji, mf.name)]
+            for f in mf.flows:
+                flow_node.append(nid)
+                flow_size.append(float(f.size))
+                flow_paths.append(tuple(topo.path(f.src, f.dst)))
+                flow_pathid.append(
+                    route_ids.setdefault((f.src, f.dst), len(route_ids)))
+
+    n_links = fabric.n_links
+    max_len = max((len(p) for p in flow_paths), default=1)
+    links = np.full((len(flow_paths), max_len), n_links, dtype=np.int32)
+    for i, p in enumerate(flow_paths):
+        links[i, :len(p)] = p
+
+    return PackedInstance(
+        job_names=tuple(j.name for j in jobs),
+        arrival=np.array([j.arrival for j in jobs], dtype=np.float64),
+        node_job=np.asarray(node_job, dtype=np.int32),
+        node_is_mf=np.asarray(node_is_mf, dtype=bool),
+        node_load=np.asarray(node_load, dtype=np.float64),
+        node_pend=np.asarray(node_pend, dtype=np.int32),
+        edge_parent=np.asarray(edge_parent, dtype=np.int32),
+        edge_child=np.asarray(edge_child, dtype=np.int32),
+        flow_node=np.asarray(flow_node, dtype=np.int32),
+        flow_size=np.asarray(flow_size, dtype=np.float64),
+        flow_links=links,
+        flow_pathid=np.asarray(flow_pathid, dtype=np.int32),
+        link_cap=np.asarray(fabric.cap, dtype=np.float64).copy(),
+        n_links=n_links,
+        n_routes=len(route_ids),
+        machine_speed=float(machine_speed),
+    )
+
+
+class _Batch(NamedTuple):
+    """Stacked lanes, padded to batch maxima, plus the static index
+    machinery for scatter-free reductions.  Dummy slots: job ``J``
+    (arrival=inf, invalid), node ``N`` (pend huge, never activates),
+    link ``K`` (cap=inf, absorbs padded path positions), route ``R``
+    (collects padded flows, which are never live), flow ``F`` /
+    flat-position ``F*L`` (gather targets resolving to neutral
+    elements)."""
+
+    arrival: jnp.ndarray        # [B, J+1] f8 (pad inf)
+    job_valid: jnp.ndarray      # [B, J+1] bool
+    node_job: jnp.ndarray       # [B, N+1] i4 (pad J)
+    node_is_mf: jnp.ndarray     # [B, N+1] bool
+    node_load: jnp.ndarray      # [B, N+1] f8
+    node_pend0: jnp.ndarray     # [B, N+1] i4
+    node_valid: jnp.ndarray     # [B, N+1] bool
+    edge_parent: jnp.ndarray    # [B, E] i4 (pad N)
+    flow_node: jnp.ndarray      # [B, F] i4 (pad N, sorted)
+    flow_job: jnp.ndarray       # [B, F] i4 (pad J, sorted)
+    flow_size: jnp.ndarray      # [B, F] f8 (pad 0)
+    flow_links: jnp.ndarray     # [B, F, L] i4 (pad K)
+    flow_pathid: jnp.ndarray    # [B, F] i4 (pad R)
+    flow_pos: jnp.ndarray       # [B, F] i8 position within its metaflow
+    link_cap: jnp.ndarray       # [B, K+1] f8 (pad/dummy inf)
+    speed: jnp.ndarray          # [B] f8
+    # prefix-sum segment bounds (each [B, D+1] for D segments)
+    nf_bounds: jnp.ndarray      # flow_node   -> nodes   [B, N+2]
+    ne_bounds: jnp.ndarray      # edge_child  -> nodes   [B, N+2]
+    jn_bounds: jnp.ndarray      # node_job    -> jobs    [B, J+2]
+    jf_bounds: jnp.ndarray      # flow_job    -> jobs    [B, J+2]
+    # (job, link) demand segments over the flat (flow, leg) space
+    jl_perm: jnp.ndarray        # [B, F*L] i4  sort by job*(K+1)+link
+    jl_bounds: jnp.ndarray      # [B, (J+1)*(K+1)+1] i4
+    # per-link flat (flow, leg) positions (pad F*L), real links only
+    link_pairs: jnp.ndarray     # [B, K+1, ML] i4
+
+
+class _State(NamedTuple):
+    t: jnp.ndarray              # [B] f8
+    admitted: jnp.ndarray       # [B, J+1] bool
+    node_state: jnp.ndarray     # [B, N+1] i4  0 idle / 1 active / 2 done
+    pend: jnp.ndarray           # [B, N+1] i4
+    task_rem: jnp.ndarray       # [B, N+1] f8
+    act_seq: jnp.ndarray        # [B, N+1] i8  per-lane activation sequence
+    act_ctr: jnp.ndarray        # [B] i8
+    flow_rem: jnp.ndarray       # [B, F] f8
+    flow_done: jnp.ndarray      # [B, F] bool
+    job_done: jnp.ndarray       # [B, J+1] bool
+    job_finish: jnp.ndarray     # [B, J+1] f8
+    last_flow: jnp.ndarray      # [B, J+1] f8
+    done: jnp.ndarray           # [B] bool
+    deadlock: jnp.ndarray       # [B] bool
+    events: jnp.ndarray         # [B] i8
+
+
+def _bounds(ids: np.ndarray, n_segs: int) -> np.ndarray:
+    """Segment bounds of a *sorted* id array: segment ``d`` occupies
+    ``[out[d], out[d+1])``."""
+    return np.searchsorted(ids, np.arange(n_segs + 1)).astype(np.int32)
+
+
+def _pad_lists(lists: list[list[int]], width: int, fill: int) -> np.ndarray:
+    out = np.full((len(lists), width), fill, dtype=np.int32)
+    for i, row in enumerate(lists):
+        out[i, :len(row)] = row
+    return out
+
+
+def _seg_sum(vals: jnp.ndarray, bounds: jnp.ndarray) -> jnp.ndarray:
+    """Sum ``vals`` ([B, M]) over the static segments described by
+    ``bounds`` ([B, D+1]) — cumsum + two gathers, no scatter."""
+    cs = jnp.pad(jnp.cumsum(vals, axis=1), ((0, 0), (1, 0)))
+    bi = jnp.arange(vals.shape[0])[:, None]
+    return cs[bi, bounds[:, 1:]] - cs[bi, bounds[:, :-1]]
+
+
+def _pack_batch(lanes: Sequence[PackedInstance]) -> _Batch:
+    B = len(lanes)
+    J = max(p.arrival.size for p in lanes)
+    N = max(p.node_job.size for p in lanes)
+    E = max(p.edge_parent.size for p in lanes)
+    F = max(p.flow_node.size for p in lanes)
+    L = max(p.flow_links.shape[1] for p in lanes)
+    K = max(p.n_links for p in lanes)
+    R = max(p.n_routes for p in lanes)
+
+    arrival = np.full((B, J + 1), np.inf)
+    job_valid = np.zeros((B, J + 1), dtype=bool)
+    node_job = np.full((B, N + 1), J, dtype=np.int32)
+    node_is_mf = np.zeros((B, N + 1), dtype=bool)
+    node_load = np.zeros((B, N + 1))
+    node_pend0 = np.full((B, N + 1), 2 ** 30, dtype=np.int32)
+    node_valid = np.zeros((B, N + 1), dtype=bool)
+    edge_parent = np.full((B, E), N, dtype=np.int32)
+    edge_child = np.full((B, E), N, dtype=np.int32)
+    flow_node = np.full((B, F), N, dtype=np.int32)
+    flow_job = np.full((B, F), J, dtype=np.int32)
+    flow_size = np.zeros((B, F))
+    flow_links = np.full((B, F, L), K, dtype=np.int32)
+    flow_pathid = np.full((B, F), R, dtype=np.int32)
+    flow_pos = np.zeros((B, F), dtype=np.int64)
+    link_cap = np.full((B, K + 1), np.inf)
+    speed = np.empty(B)
+
+    for b, p in enumerate(lanes):
+        j, n, e, f = (p.arrival.size, p.node_job.size, p.edge_parent.size,
+                      p.flow_node.size)
+        arrival[b, :j] = p.arrival
+        job_valid[b, :j] = True
+        node_job[b, :n] = p.node_job
+        node_is_mf[b, :n] = p.node_is_mf
+        node_load[b, :n] = p.node_load
+        node_pend0[b, :n] = p.node_pend
+        node_valid[b, :n] = True
+        edge_parent[b, :e] = p.edge_parent
+        edge_child[b, :e] = p.edge_child
+        flow_node[b, :f] = p.flow_node
+        flow_job[b, :f] = p.node_job[p.flow_node]
+        flow_size[b, :f] = p.flow_size
+        flow_links[b, :f, :p.flow_links.shape[1]] = np.where(
+            p.flow_links == p.n_links, K, p.flow_links)
+        flow_pathid[b, :f] = p.flow_pathid
+        # Position within the owning metaflow: flows are packed
+        # metaflow-contiguously, so each group is a run of equal
+        # flow_node values.
+        if f:
+            starts = np.flatnonzero(np.diff(p.flow_node, prepend=-1) != 0)
+            pos = np.arange(f, dtype=np.int64)
+            flow_pos[b, :f] = pos - np.repeat(
+                pos[starts], np.diff(np.append(starts, f)))
+        link_cap[b, :p.n_links] = p.link_cap
+        speed[b] = p.machine_speed
+
+    # --- static reduction machinery (all id arrays above are sorted)
+    K1 = K + 1
+    nf_bounds = np.stack([_bounds(flow_node[b], N + 1) for b in range(B)])
+    ne_bounds = np.stack([_bounds(edge_child[b], N + 1) for b in range(B)])
+    jn_bounds = np.stack([_bounds(node_job[b], J + 1) for b in range(B)])
+    jf_bounds = np.stack([_bounds(flow_job[b], J + 1) for b in range(B)])
+
+    links_flat = flow_links.reshape(B, F * L)
+    jl_key = np.repeat(flow_job, L, axis=1).astype(np.int64) * K1 + links_flat
+    jl_perm = np.argsort(jl_key, axis=1, kind="stable").astype(np.int32)
+    jl_bounds = np.stack([
+        _bounds(np.take_along_axis(jl_key, jl_perm.astype(np.int64),
+                                   axis=1)[b], (J + 1) * K1)
+        for b in range(B)])
+
+    link_lists: list[list[int]] = []
+    for b, p in enumerate(lanes):
+        per_link: list[list[int]] = [[] for _ in range(K1)]
+        flat = links_flat[b]
+        for pos_i in range(p.flow_node.size * L):
+            lk = int(flat[pos_i])
+            if lk < K:                       # real links only
+                per_link[lk].append(pos_i)
+        link_lists.extend(per_link)
+    ml = max((len(x) for x in link_lists), default=0) or 1
+    link_pairs = _pad_lists(link_lists, ml, F * L).reshape(B, K1, ml)
+
+    return _Batch(*map(jnp.asarray, (
+        arrival, job_valid, node_job, node_is_mf, node_load, node_pend0,
+        node_valid, edge_parent, flow_node, flow_job, flow_size,
+        flow_links, flow_pathid, flow_pos, link_cap, speed,
+        nf_bounds, ne_bounds, jn_bounds, jf_bounds,
+        jl_perm, jl_bounds, link_pairs)))
+
+
+def _init_state(pk: _Batch) -> _State:
+    B, J1 = pk.arrival.shape
+    N1 = pk.node_job.shape[1]
+    return _State(
+        t=jnp.zeros(B),
+        admitted=jnp.zeros((B, J1), dtype=bool),
+        node_state=jnp.zeros((B, N1), dtype=jnp.int32),
+        pend=pk.node_pend0,
+        task_rem=pk.node_load,
+        act_seq=jnp.full((B, N1), _BIG),
+        act_ctr=jnp.zeros(B, dtype=jnp.int64),
+        flow_rem=pk.flow_size,
+        # Zero-size flows are born finished (Simulator._build_tables
+        # presets _flow_done), so they never stamp last_flow.
+        flow_done=pk.flow_size <= EPS,
+        job_done=jnp.zeros((B, J1), dtype=bool),
+        job_finish=jnp.zeros((B, J1)),
+        last_flow=jnp.where(jnp.isfinite(pk.arrival), pk.arrival, 0.0),
+        done=jnp.zeros(B, dtype=bool),
+        deadlock=jnp.zeros(B, dtype=bool),
+        events=jnp.zeros(B, dtype=jnp.int64),
+    )
+
+
+# ------------------------------------------------------------------- settle
+def _settle(pk: _Batch, s: _State) -> _State:
+    """Commit everything instantaneous at the current lane times:
+    admissions, flow/metaflow/task completions, the DAG activation
+    cascade (breadth-first waves to a fixpoint), job retirement, and
+    lane-done flags.  Idempotent — running it twice changes nothing."""
+    B = s.t.shape[0]
+    bi = jnp.arange(B)[:, None]
+
+    admitted = s.admitted | (pk.job_valid & (pk.arrival <= s.t[:, None] + EPS))
+
+    # Newly drained flows stamp the owning job's last-flow time (the
+    # numpy core does this in its completion commit).
+    new_fd = ~s.flow_done & (s.flow_rem <= EPS)
+    flow_done = s.flow_done | new_fd
+    hit = _seg_sum(new_fd.astype(jnp.int32), pk.jf_bounds) > 0
+    last_flow = jnp.where(hit, s.t[:, None], s.last_flow)
+    # Live-flow counts per metaflow are fixed for the whole cascade
+    # (flow_rem only changes in _kick).
+    flows_left = _seg_sum((~flow_done).astype(jnp.int32), pk.nf_bounds)
+    adm_node = admitted[bi, pk.node_job]
+
+    def cascade(carry):
+        node_state, pend, act_seq, act_ctr, last_flow, _ = carry
+        new_done = (node_state == 1) & jnp.where(pk.node_is_mf,
+                                                 flows_left == 0,
+                                                 s.task_rem <= EPS)
+        node_state = jnp.where(new_done, 2, node_state)
+        # finish_metaflow stamps last_flow even for zero-flow metaflows.
+        mf_hit = _seg_sum((new_done & pk.node_is_mf).astype(jnp.int32),
+                          pk.jn_bounds) > 0
+        last_flow = jnp.where(mf_hit, s.t[:, None], last_flow)
+        dec = _seg_sum(new_done[bi, pk.edge_parent].astype(jnp.int32),
+                       pk.ne_bounds)
+        pend = pend - dec
+        act = (node_state == 0) & (pend <= 0) & pk.node_valid & adm_node
+        node_state = jnp.where(act, 1, node_state)
+        rank = jnp.cumsum(act.astype(jnp.int64), axis=1)
+        act_seq = jnp.where(act, act_ctr[:, None] + rank - 1, act_seq)
+        act_ctr = act_ctr + rank[:, -1]
+        changed = (new_done | act).any()
+        return node_state, pend, act_seq, act_ctr, last_flow, changed
+
+    carry = (s.node_state, s.pend, s.act_seq, s.act_ctr, last_flow,
+             jnp.array(True))
+    carry = lax.while_loop(lambda c: c[-1], cascade, carry)
+    node_state, pend, act_seq, act_ctr, last_flow, _ = carry
+
+    unfin = _seg_sum(((node_state != 2) & pk.node_valid).astype(jnp.int32),
+                     pk.jn_bounds)
+    new_jd = admitted & (unfin == 0) & ~s.job_done
+    job_done = s.job_done | new_jd
+    job_finish = jnp.where(new_jd, s.t[:, None], s.job_finish)
+    done = (job_done | ~pk.job_valid).all(axis=1)
+
+    return s._replace(admitted=admitted, node_state=node_state, pend=pend,
+                      act_seq=act_seq, act_ctr=act_ctr, flow_done=flow_done,
+                      job_done=job_done, job_finish=job_finish,
+                      last_flow=last_flow, done=done)
+
+
+# --------------------------------------------------------------------- kick
+def _kick(pk: _Batch, s: _State) -> _State:
+    """One fifo decision + fluid advance per lane: MADD each job's
+    coflow (all its active metaflows) in job-priority order on the
+    residual link capacities, work-conserving backfill over the live
+    flows in priority waves, then advance every lane to its own next
+    event time.  Done lanes get dt=0 and stay bit-frozen; lanes with no
+    possible progress raise the deadlock flag (checked on the host)."""
+    B, F = s.flow_rem.shape
+    J1 = pk.arrival.shape[1]
+    N1 = pk.node_job.shape[1]
+    L = pk.flow_links.shape[2]
+    K1 = pk.link_cap.shape[1]
+    bi = jnp.arange(B)[:, None]
+    links_flat = pk.flow_links.reshape(B, F * L)
+
+    live = (s.node_state[bi, pk.flow_node] == 1) & (s.flow_rem > EPS)
+
+    # --- MADD walk: all (job, link) demands in one prefix pass, then a
+    # scan whose body is elementwise on [B, links].
+    w = jnp.where(live, s.flow_rem, 0.0)
+    w_fl = jnp.repeat(w, L, axis=1)[bi, pk.jl_perm]
+    # XLA's cumsum is a reassociated tree scan, so an *empty* segment's
+    # prefix difference can leave ±ulp-of-prefix residue instead of an
+    # exact 0.0 — and a phantom "used" link on an exhausted residual
+    # would wrongly refuse the whole MADD.  An integer count of live
+    # contributors is exact; it gates which segments carry demand.
+    cnt = _seg_sum((w_fl > 0.0).astype(jnp.int32), pk.jl_bounds)
+    dem_all = jnp.where(cnt > 0, _seg_sum(w_fl, pk.jl_bounds),
+                        0.0).reshape(B, J1, K1)
+
+    def madd(carry, dem):
+        res, gamma_ok = carry                  # dem: [B, K1] for this job
+        used = dem > 0.0
+        blocked = (used & (res <= EPS)).any(axis=1)
+        gamma = jnp.where(used & (res > EPS), dem / res, 0.0).max(axis=1)
+        ok = ~blocked & (gamma > EPS)
+        safe = jnp.where(ok, gamma, 1.0)
+        res = jnp.where(ok[:, None],
+                        jnp.clip(res - dem / safe[:, None], 0.0, None), res)
+        return (res, gamma_ok), (ok, safe)
+
+    (res, _), (ok_j, gamma_j) = lax.scan(
+        madd, (pk.link_cap, None), jnp.moveaxis(dem_all[:, :J1 - 1], 0, 1))
+    ok_j = jnp.concatenate([jnp.moveaxis(ok_j, 0, 1),
+                            jnp.zeros((B, 1), dtype=bool)], axis=1)
+    gamma_j = jnp.concatenate([jnp.moveaxis(gamma_j, 0, 1),
+                               jnp.ones((B, 1))], axis=1)
+    rates = jnp.where(live & ok_j[bi, pk.flow_job],
+                      s.flow_rem / gamma_j[bi, pk.flow_job], 0.0)
+
+    # --- backfill: priority key = (job, metaflow activation order, flow
+    # position) — the numpy walk's concatenation order.  Flows execute
+    # in priority *waves*: a flow runs once no pending higher-priority
+    # flow shares any of its links, which applies the per-link
+    # subtractions in exactly the sequential sweep's order.  The numpy
+    # core's first-live-flow-per-route optimization needs no analogue
+    # here: a grant zeroes the path's smallest residual, so same-route
+    # followers are retired by the capacity filter below, exactly.
+    seq = jnp.minimum(s.act_seq[bi, pk.flow_node], N1 + 1)
+    key = ((pk.flow_job.astype(jnp.int64) * (N1 + 2) + seq) * (F + 1)
+           + pk.flow_pos)
+    keyed = jnp.where(live, key, _BIG)
+
+    def wave(carry):
+        res, rates, pending, _ = carry
+        # Residuals only shrink during the sweep, so a flow whose path
+        # minimum is already ≤ EPS can never receive a grant at its
+        # turn — retiring it now is exact and collapses the priority
+        # chains to the few flows with actual capacity.
+        h_row = res[bi, links_flat].reshape(B, F, L).min(axis=2)
+        pending = pending & (h_row > EPS)
+        key_p = jnp.where(pending, keyed, _BIG)
+        key_fl = jnp.concatenate([jnp.repeat(key_p, L, axis=1),
+                                  jnp.full((B, 1), _BIG)], axis=1)
+        best = key_fl[bi[:, :, None], pk.link_pairs].min(axis=2)  # [B, K1]
+        # A flow is at its turn iff it is the best (minimum-key) pending
+        # flow on EVERY link it crosses.  best ≤ key on each of its real
+        # links (its own key participates in those minima), so the test
+        # is min-over-links == key; the dummy link is pinned to the
+        # sentinel so padded path positions cannot veto a turn.
+        best = jnp.where(jnp.arange(K1) == K1 - 1, _BIG, best)
+        at_turn = pending & (best[bi, links_flat].reshape(B, F, L)
+                             .min(axis=2) == keyed)
+        h = jnp.where(at_turn, h_row, 0.0)
+        rates = rates + h
+        h_fl = jnp.concatenate([jnp.repeat(h, L, axis=1),
+                                jnp.zeros((B, 1))], axis=1)
+        sub = h_fl[bi[:, :, None], pk.link_pairs].sum(axis=2)
+        res = res - jnp.where(jnp.arange(K1) == K1 - 1, 0.0, sub)
+        pending = pending & ~at_turn
+        return res, rates, pending, pending.any()
+
+    carry = (res, rates, live, live.any())
+    res, rates, _, _ = lax.while_loop(lambda c: c[-1], wave, carry)
+
+    # --- event horizon
+    flowing = (rates > EPS) & (s.flow_rem > EPS)
+    dt = jnp.where(flowing, s.flow_rem / jnp.where(flowing, rates, 1.0),
+                   jnp.inf).min(axis=1)
+    task_running = (s.node_state == 1) & ~pk.node_is_mf & pk.node_valid
+    dt = jnp.minimum(dt, jnp.where(task_running, s.task_rem, jnp.inf)
+                     .min(axis=1) / pk.speed)
+    waiting = pk.job_valid & ~s.admitted
+    dt = jnp.minimum(dt, jnp.where(waiting, pk.arrival, jnp.inf)
+                     .min(axis=1) - s.t)
+    dead = ~s.done & jnp.isinf(dt)
+    dt = jnp.where(s.done | dead, 0.0, jnp.maximum(dt, 0.0))
+
+    # --- fluid advance
+    flow_rem = jnp.where(
+        flowing, jnp.clip(s.flow_rem - rates * dt[:, None], 0.0, None),
+        s.flow_rem)
+    task_rem = jnp.where(
+        task_running,
+        jnp.maximum(s.task_rem - pk.speed[:, None] * dt[:, None], 0.0),
+        s.task_rem)
+    return s._replace(t=s.t + dt, flow_rem=flow_rem, task_rem=task_rem,
+                      deadlock=s.deadlock | dead,
+                      events=s.events + (~s.done).astype(jnp.int64))
+
+
+_TRACES = 0
+
+
+def _step(pk: _Batch, s: _State) -> _State:
+    """One lockstep event for every unfinished lane: advance each lane
+    to its own next event time, then settle the consequences."""
+    global _TRACES
+    _TRACES += 1                     # executes at trace time only
+    return _settle(pk, _kick(pk, s))
+
+
+def _multi_step(pk: _Batch, s: _State, n: int) -> _State:
+    """``n`` lockstep events in one device program — the host only
+    syncs (reads the done/deadlock flags) once per window."""
+    return lax.fori_loop(0, n, lambda _, st: _step(pk, st), s)
+
+
+_step_jit = jax.jit(_step)
+_multi_step_jit = jax.jit(_multi_step, static_argnums=2)
+_settle_jit = jax.jit(_settle)
+
+
+def trace_count() -> int:
+    """How many times the jitted step has been traced (== number of
+    distinct batch shapes seen).  The recompilation-guard test pins one
+    trace per scenario shape."""
+    return _TRACES
+
+
+# ---------------------------------------------------------------------- run
+@dataclass(frozen=True)
+class LaneResult:
+    """Per-lane outcome, keyed like ``SimResult``: per-job JCT/CCT by
+    job name, plus the lane makespan and lockstep event count."""
+
+    jct: dict[str, float]
+    cct: dict[str, float]
+    makespan: float
+    events: int
+
+
+def run_fifo_batch(lanes: Sequence[PackedInstance], *,
+                   steps_per_sync: int = 16,
+                   max_events: int = 5_000_000) -> list[LaneResult]:
+    """Advance every lane to completion under the fifo policy; returns
+    per-lane results in input order.  ``steps_per_sync`` bounds how many
+    lockstep events run per host round-trip — finished lanes are masked
+    no-ops, so overshooting a fast lane's final event is harmless.
+    Raises on deadlock (mirroring the numpy core) and on ``max_events``
+    (livelock guard)."""
+    if not lanes:
+        return []
+    pk = _pack_batch(lanes)
+    s = _settle_jit(pk, _init_state(pk))
+    steps = 0
+    while True:
+        halted = np.asarray(s.done | s.deadlock)
+        if halted.all():
+            break
+        if steps > max_events:
+            raise RuntimeError(
+                "batched simulator exceeded max_events — livelock?")
+        s = _multi_step_jit(pk, s, steps_per_sync)
+        steps += steps_per_sync
+    if bool(np.asarray(s.deadlock).any()):
+        bad = [i for i, d in enumerate(np.asarray(s.deadlock).tolist()) if d]
+        raise RuntimeError(f"deadlock: no progress possible in lanes {bad}")
+
+    t = np.asarray(s.t)
+    jf = np.asarray(s.job_finish)
+    lf = np.asarray(s.last_flow)
+    ev = np.asarray(s.events)
+    return [
+        LaneResult(
+            jct={n: float(jf[b, i] - p.arrival[i])
+                 for i, n in enumerate(p.job_names)},
+            cct={n: float(lf[b, i] - p.arrival[i])
+                 for i, n in enumerate(p.job_names)},
+            makespan=float(t[b]),
+            events=int(ev[b]),
+        )
+        for b, p in enumerate(lanes)
+    ]

@@ -41,8 +41,12 @@ class UnsupportedTopologyError(ValueError):
 
 class ReferenceSimulator:
     """The pre-compaction core.  Same constructor contract as
-    ``Simulator`` (minus the debug flag — its capacity check always runs,
-    as it used to)."""
+    ``Simulator`` minus the post-freeze additions — ``debug_checks``
+    (this core's capacity check always runs, as it used to), ``faults``,
+    ``retransmit`` and ``tracer`` (hard failures, rerouting,
+    retransmission accounting and structured tracing exist only in the
+    live core; ``tests/test_docs.py`` pins this docstring against the
+    two signatures)."""
 
     def __init__(self, fabric: Fabric, jobs: list[JobDAG], scheduler,
                  machine_speed: float = 1.0,

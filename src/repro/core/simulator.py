@@ -86,6 +86,11 @@ def _csr_gather(lp: np.ndarray, li: np.ndarray, rows: np.ndarray
 
 @dataclass
 class SimResult:
+    """Everything one ``simulate`` run produced: per-job JCT/CCT maps
+    (both measured from each job's arrival), per-metaflow/task finish
+    instants, the realized metaflow service order, event/decision
+    counts, and the fault/perturbation accounting."""
+
     jct: dict[str, float]                 # job -> completion time (since arrival)
     cct: dict[str, float]                 # job -> last-flow completion (since arrival)
     mf_finish: dict[tuple[str, str], float]
@@ -670,6 +675,14 @@ class SchedView:
 
 
 class Simulator:
+    """The event-driven fluid simulator (compacted core, DESIGN.md §10).
+
+    Advances (jobs, scheduler, fabric) through admission / activation /
+    finish events with piecewise-constant rates between them; per-event
+    work is O(active flows).  Most callers want the :func:`simulate`
+    wrapper; construct directly to thread perturbations, faults, a
+    tracer, or ``debug_checks`` through one run."""
+
     def __init__(self, fabric: Fabric, jobs: list[JobDAG], scheduler,
                  machine_speed: float = 1.0,
                  perturbations: list[Perturbation] | None = None,

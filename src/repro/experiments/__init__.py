@@ -23,8 +23,10 @@ from repro.experiments.resilience import (
     resilience_spec,
 )
 from repro.experiments.runner import (
+    batchable,
     load_shard,
     run_cell,
+    run_cells_batched,
     run_sweep,
     scenario_rows,
     shard_path,
@@ -45,6 +47,7 @@ __all__ = [
     "SweepSpec",
     "aggregate",
     "aggregate_resilience",
+    "batchable",
     "check",
     "check_resilience",
     "fingerprint",
@@ -54,6 +57,7 @@ __all__ = [
     "resilience_spec",
     "resolve_topology",
     "run_cell",
+    "run_cells_batched",
     "run_sweep",
     "scenario_rows",
     "shard_path",

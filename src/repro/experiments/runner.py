@@ -147,6 +147,106 @@ def run_cell(
     return rec
 
 
+def batchable(cell: Cell) -> bool:
+    """True iff ``run_cells_batched`` can run this cell on the lockstep
+    engine: fifo policy, fault-free.  Everything else (ordered-rate
+    policies, chaos cells) needs the numpy core's Python scheduler
+    lifecycle — see DESIGN.md §17 for the porting contract."""
+    return cell.policy == "fifo" and not cell.fault_intensity
+
+
+def run_cells_batched(
+    cells: list[Cell],
+    quick: bool = False,
+    workers: int | None = None,
+    progress=None,
+) -> list[dict]:
+    """Execute cells, lockstep-batching the fifo fault-free ones.
+
+    Batchable cells (``batchable``) are grouped by ``(scenario,
+    topology)`` — lanes in a group share one padded batch shape, so one
+    jitted program (``repro.core.simjax.run_fifo_batch``) advances all
+    of a group's seeds together.  Every other cell falls back to
+    ``run_cell``, process-parallel when ``workers`` allows.  Records
+    come back in input-cell order and in the ``run_cell`` shape, with
+    two documented deviations on batched records: an ``"engine":
+    "simjax"`` marker, and a result whose ``events`` counts lockstep
+    steps while ``sched_full``/``sched_refresh`` are 0 (the jitted
+    engine re-decides every step; nothing is cached to count).  Per-job
+    JCT/CCT agree with the numpy core within float tolerance
+    (``benchmarks/perf_sim_core.py BATCHED_TOL``), not bit-exactly —
+    use ``run_cell``/``run_sweep`` for fingerprint-pinned artifacts.
+    """
+    from repro.core.simjax import pack_instance, run_fifo_batch
+
+    records: dict[int, dict] = {}
+    groups: dict[tuple[str, str], list[int]] = {}
+    rest: list[int] = []
+    for ix, cell in enumerate(cells):
+        if batchable(cell):
+            groups.setdefault((cell.scenario, cell.topology), []).append(ix)
+        else:
+            rest.append(ix)
+
+    for (scen, topo), ixs in sorted(groups.items()):
+        t0 = time.perf_counter()
+        built = [
+            build_scenario(scen, seed=cells[ix].seed, quick=quick,
+                           topology=topo)
+            for ix in ixs
+        ]
+        lanes = [pack_instance(fabric, jobs) for fabric, jobs in built]
+        results = run_fifo_batch(lanes)
+        wall = (time.perf_counter() - t0) / len(ixs)
+        for ix, (fabric, jobs), lane in zip(ixs, built, results):
+            if len(lane.jct) != len(jobs):
+                raise AssertionError(
+                    f"{scen}/fifo/seed{cells[ix].seed}: "
+                    f"{len(lane.jct)} JCTs for {len(jobs)} jobs"
+                )
+            rr = RunResult(
+                n_jobs=len(lane.jct),
+                avg_jct=sum(lane.jct.values()) / max(len(lane.jct), 1),
+                avg_cct=sum(lane.cct.values()) / max(len(lane.cct), 1),
+                makespan=lane.makespan,
+                events=lane.events,
+                sched_full=0,
+                sched_refresh=0,
+                jct=dict(lane.jct),
+                cct=dict(lane.cct),
+                wall_s=wall,
+            )
+            records[ix] = {
+                "scenario": scen,
+                "policy": "fifo",
+                "topology": topo,
+                "seed": cells[ix].seed,
+                "engine": "simjax",
+                "result": rr.to_json(),
+            }
+        if progress:
+            progress(f"batched {scen}@{topo}: {len(ixs)} lanes")
+
+    if rest and (workers is None or workers > 1):
+        workers = workers or os.cpu_count() or 1
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=min(workers, len(rest)),
+                                 mp_context=ctx) as pool:
+            futs = {pool.submit(run_cell, cells[ix], quick): ix
+                    for ix in rest}
+            for fut in as_completed(futs):
+                ix = futs[fut]
+                records[ix] = fut.result()
+                if progress:
+                    progress(f"fallback cell {ix} done")
+    else:
+        for ix in rest:
+            records[ix] = run_cell(cells[ix], quick=quick)
+            if progress:
+                progress(f"fallback cell {ix} done")
+    return [records[ix] for ix in range(len(cells))]
+
+
 def scenario_rows(
     scenarios,
     policies,

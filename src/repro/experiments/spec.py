@@ -15,6 +15,23 @@ cross-checkable.  Every cell is independently reproducible: rebuilding
 it outside the sweep via ``build_scenario(scenario, seed=seed,
 topology=topology)`` gives the bit-identical result (asserted in
 ``tests/test_experiments.py``).
+
+Worked example — compile a spec into its paired cells::
+
+    >>> from repro.experiments import SweepSpec
+    >>> spec = SweepSpec(scenarios=("pipe_serve",),
+    ...                  policies=("fifo", "msa"), n_seeds=2)
+    >>> [c.seed for c in spec.cells()]  # policies adjacent per workload
+    [0, 0, 1, 1]
+    >>> spec.cells()[0]                 # doctest: +NORMALIZE_WHITESPACE
+    Cell(scenario='pipe_serve', policy='fifo', topology='big_switch',
+         seed=0, fault_intensity=0.0)
+    >>> len(spec.shards())              # 4 cells fit one default shard
+    1
+
+``repro.experiments.run_sweep`` executes those shards process-parallel
+and resumably; ``run_cells_batched`` routes the fifo fault-free subset
+through the lockstep JAX engine instead (DESIGN.md §17).
 """
 
 from __future__ import annotations

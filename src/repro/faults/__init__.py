@@ -8,7 +8,19 @@ simulator executes, strict-linted by ``repro.analysis.lint.lint_faults``.
 :func:`chaos_spec` is the intensity-scaled scenario family behind the
 resilience sweep (``benchmarks/resilience.py`` / ``BENCH_resilience.json``).
 
-Quickstart::
+Worked example — one scheduled link-failure window, compiled to the
+deterministic event stream the simulator consumes::
+
+    >>> from repro.core import make_topology
+    >>> from repro.faults import FaultSpec, LinkFailure
+    >>> spec = FaultSpec(horizon=10.0,
+    ...                  failures=(LinkFailure(link=0, at=2.0,
+    ...                                        repair_at=4.0),))
+    >>> [(e.time, e.kind, e.target)
+    ...  for e in spec.compile(make_topology("big_switch", 2))]
+    [(2.0, 'fail_link', 0), (4.0, 'repair_link', 0)]
+
+Quickstart for the intensity-scaled chaos family::
 
     from repro.core import simulate
     from repro.faults import chaos_spec
